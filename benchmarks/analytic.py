@@ -1,0 +1,209 @@
+"""Analytic FLOP/byte/collective model per (arch × shape × mesh).
+
+Primary source for §Roofline.  XLA:CPU's ``cost_analysis`` counts a
+``while`` body once regardless of trip count, so scan-over-layers (and the
+microbatch/tile scans) make the compiled numbers under-read by up to the
+layer count; the dry-run JSONs are kept as structural cross-checks and this
+model provides the trip-count-exact terms.  Validated against an UNROLLED
+2-layer compile in tests/test_roofline.py (HLO flops within tolerance of
+this model's per-layer prediction).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 (≈394 TOP/s int8),
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import ternary
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_OPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS_PER_POD = 256
+
+
+@dataclasses.dataclass
+class CellModel:
+    arch: str
+    shape: str
+    params_total: int
+    params_active: int
+    model_flops: float          # 6·N·D (train) or 2·N_active·D (inference)
+    exec_flops: float           # incl. remat recompute + attention + MoE pad
+    hbm_bytes: float            # per device per step
+    coll_bytes: float           # per device per step (ICI)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / achievable step time (bounded by the max
+        term) — the fraction of the roofline this configuration reaches."""
+        t_useful = self.model_flops / PEAK_FLOPS_BF16
+        return t_useful / max(self.step_s, 1e-30)
+
+
+def param_counts(cfg: ModelConfig):
+    """(total, active) parameter counts, embeddings included in total."""
+    d = cfg.d_model
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.block_kind == "xlstm_pair":
+        d_in = cfg.n_heads * cfg.hd
+        mlstm = d * 3 * d_in + d * 2 * cfg.n_heads + d * d_in + d_in * d
+        slstm = d * 4 * d_in + 4 * cfg.n_heads * cfg.hd * cfg.hd + d_in * d
+        per_pair = mlstm + slstm
+        dec_total = (cfg.n_layers // 2) * per_pair
+        dec_active = dec_total
+    else:
+        ffn_one = 3 * d * cfg.d_ff
+        if cfg.n_experts:
+            ffn_total = cfg.n_experts * ffn_one + d * cfg.n_experts
+            ffn_active = cfg.top_k * ffn_one + d * cfg.n_experts
+        else:
+            ffn_total = ffn_active = ffn_one
+        ssm = 0
+        if cfg.block_kind == "hymba":
+            d_in = cfg.n_heads * cfg.hd
+            ssm = d * 2 * d_in + d * 2 * cfg.ssm_state + d * cfg.n_heads \
+                + d_in * d + cfg.ssm_conv * d_in
+        dec_total = cfg.n_layers * (attn + ffn_total + ssm)
+        dec_active = cfg.n_layers * (attn + ffn_active + ssm)
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.frontend != "token":
+        embed = cfg.vocab_size * d          # head only; frontend stubbed
+    return dec_total + embed, dec_active + embed
+
+
+def _attn_flops_prefill(cfg: ModelConfig, b: int, s: int) -> float:
+    """Causal (block-skipped) QK^T + PV flops, forward."""
+    if cfg.block_kind == "xlstm_pair":
+        return 0.0
+    live = s * s / 2 if cfg.swa_window is None else min(
+        s * s / 2, s * cfg.swa_window)
+    return cfg.n_layers * b * live * cfg.q_dim * 2 * 2
+
+
+def _attn_flops_decode(cfg: ModelConfig, b: int, s: int) -> float:
+    if cfg.block_kind == "xlstm_pair":
+        return 0.0
+    live = s if cfg.swa_window is None else min(s, cfg.swa_window)
+    return cfg.n_layers * b * live * cfg.q_dim * 2 * 2
+
+
+def _kv_cache_bytes(cfg: ModelConfig, b: int, s: int, dtype_bytes=2) -> float:
+    if cfg.block_kind == "xlstm_pair":
+        # recurrent state: C (H, hd, hd) f32 + small, per pair x2 blocks
+        return (cfg.n_layers // 2) * b * cfg.n_heads * cfg.hd * (cfg.hd + 2) * 4
+    return cfg.n_layers * 2 * b * s * cfg.kv_dim * dtype_bytes
+
+
+def cell_model(arch: str, shape_name: str, chips: int = CHIPS_PER_POD,
+               model_par: int = 16, data_par: int = 16,
+               opt: tuple = ()) -> CellModel:
+    """opt: hillclimb variants (§Perf) — subset of
+    {"dpzero1", "kv8", "int8fwd", "compress"}."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n_total, n_active = param_counts(cfg)
+    tokens = b * s
+    packed_bytes = n_total * ternary.bits_per_weight(cfg.group_size) / 8
+    kv_scale = 0.53 if "kv8" in opt else 1.0   # int8 + per-head scales
+
+    if shape.kind == "train":
+        # QAT: master weights bf16; fwd+bwd = 6·N·D; full remat adds ~1 fwd.
+        model_flops = 6.0 * n_active * tokens
+        exec_flops = 8.0 * n_active * tokens \
+            + 3.5 * _attn_flops_prefill(cfg, b, s)  # fwd+bwd+rematfwd
+        if cfg.n_experts:
+            exec_flops *= 1.25  # capacity-factor padding
+        # per-device HBM: weights + grads + opt(2xf32) read+write + acts
+        w_dev = n_total * 2 / chips          # bf16, fully sharded (FSDP)
+        opt_dev = n_total * 8 / chips
+        act_dev = tokens * cfg.d_model * 2 * cfg.n_layers / chips  # carries
+        hbm = 3 * w_dev + 3 * opt_dev + 4 * act_dev
+        # collectives: TP all-reduce of activations 2/layer fwd + 2 bwd (SP
+        # halves payload but adds gathers — model the AR form), plus DP
+        # grad reduce-scatter+all-gather (2x param shard bytes x (n-1)/n).
+        tp = model_par
+        ar_act = (4 * cfg.n_layers * (tokens / data_par) * cfg.d_model * 2
+                  * 2 * (tp - 1) / tp)
+        dp_grad = 2 * (n_total * 2 / model_par) * (data_par - 1) / data_par
+        if "spmix" in opt:
+            # A6: the compiled layout emits SP all-gathers for most of the
+            # activation traffic (measured HLO mix on qwen2 train: AG 9.6 vs
+            # AR 7.4 GiB/dev).  AR sends 2x payload; mix-weighted wire bytes
+            # = (AG + 2*AR) / (2*(AG+AR)) of the all-AR model ~= 0.725.
+            ar_act *= (9.6 + 2 * 7.4) / (2 * (9.6 + 7.4))
+        coll = ar_act + dp_grad
+        if "dpzero1" in opt:
+            # no TP: collectives = grad all-reduce (2x payload, ring) +
+            # post-update param all-gather; optionally int8-compressed
+            w_bytes = n_total * 2
+            grad_red = 2 * w_bytes * (chips - 1) / chips
+            if "compress" in opt:
+                grad_red /= 4
+            coll = grad_red + w_bytes
+            hbm = 3 * n_total * 2 + 3 * n_total * 8 / chips \
+                + 4 * tokens * cfg.d_model * 2 * cfg.n_layers / chips
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * tokens + _attn_flops_prefill(cfg, b, s)
+        exec_flops = model_flops * (1.25 if cfg.n_experts else 1.0)
+        w_dev = packed_bytes / model_par     # packed stream, model-sharded
+        act_dev = tokens * cfg.d_model * 2 * cfg.n_layers / chips
+        kv_dev = _kv_cache_bytes(cfg, b, s) * kv_scale / chips
+        hbm = w_dev + 3 * act_dev + kv_dev
+        tp = model_par
+        coll = (2 * cfg.n_layers * (tokens / data_par) * cfg.d_model * 2
+                * 2 * (tp - 1) / tp)
+    else:  # decode / long_decode: one token per sequence
+        tokens = b
+        model_flops = 2.0 * n_active * tokens + _attn_flops_decode(cfg, b, s)
+        exec_flops = model_flops * (1.25 if cfg.n_experts else 1.0)
+        w_dev = packed_bytes / model_par     # every step streams all weights
+        kv_dev = _kv_cache_bytes(cfg, b, s) * kv_scale / chips
+        if cfg.swa_window is not None and shape.kind == "long_decode":
+            kv_read = _kv_cache_bytes(cfg, b, cfg.swa_window) * kv_scale / chips
+        else:
+            kv_read = kv_dev
+        hbm = w_dev + kv_read + kv_dev / s   # read live cache, write 1 slot
+        tp = model_par
+        coll = (2 * cfg.n_layers * (tokens / data_par) * cfg.d_model * 2
+                * 2 * (tp - 1) / tp)
+
+    per_dev_flops = exec_flops / chips
+    compute_s = per_dev_flops / PEAK_FLOPS_BF16
+    if "int8fwd" in opt and shape.kind == "train":
+        # fwd + remat-fwd contractions (4 of the 8 N·D units) run int8 at
+        # 2x MXU rate -> 6/8 of the bf16-equivalent compute time
+        compute_s *= 6.0 / 8.0
+    elif shape.kind != "train":
+        # packed serving already contracts in int8 (TLMM): linear part at
+        # 2x rate; attention stays bf16
+        pass
+    return CellModel(
+        arch=arch, shape=shape_name,
+        params_total=n_total, params_active=n_active,
+        model_flops=model_flops / chips,
+        exec_flops=per_dev_flops,
+        hbm_bytes=hbm, coll_bytes=coll,
+        compute_s=compute_s,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll / ICI_BW,
+    )

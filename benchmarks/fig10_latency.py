@@ -1,0 +1,69 @@
+"""Paper Fig. 10 analog — TTFT and decode throughput across [prompt, gen]
+configurations.
+
+Measured on the reduced BitNet via the serving engine (CPU wall times —
+shape of the curve, not absolute TPU numbers) + the analytic KV260 model
+reproducing the paper's reported envelope (TTFT 0.45s @ 64 / 0.96s @ 128,
+up to 25 tok/s decode)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import analytic, paper_model
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serving import Request, ServingEngine
+
+CONFIGS = [(64, 128), (128, 128), (128, 256), (256, 256)]
+
+
+def measured():
+    cfg = get_config("bitnet-0.73b").reduced(
+        n_layers=2, d_model=128, n_heads=4, d_ff=256, vocab_size=256)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    packed = transformer.pack_params(cfg, params)
+    rows = []
+    for plen, gen in CONFIGS:
+        eng = ServingEngine(cfg, packed, max_seq=plen + gen, batch_slots=1)
+        rng = np.random.default_rng(0)
+        req = Request(prompt=rng.integers(0, cfg.vocab_size, plen),
+                      max_new_tokens=gen)
+        t0 = time.perf_counter()
+        eng.run([req])
+        wall = time.perf_counter() - t0
+        decode_tps = (gen - 1) / max(wall - req.ttft_s, 1e-9)
+        rows.append((plen, gen, req.ttft_s, decode_tps))
+    return rows
+
+
+def modeled_kv260():
+    """Paper envelope from the bandwidth/compute model."""
+    rows = []
+    # bus efficiency implied by the paper's own 25 tok/s at short context
+    eff = paper_model.PAPER_DECODE_TPS / paper_model.build().ddr_roofline_tps
+    for plen, gen in CONFIGS:
+        # prefill: compute-bound at the paper's measured 143 tok/s rate
+        ttft = plen / paper_model.PAPER_PREFILL_TPS
+        bpt = paper_model.decode_bytes_per_token(plen + gen)
+        tps = paper_model.KV260_DDR_BW / bpt * eff
+        rows.append((plen, gen, ttft, tps))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for plen, gen, ttft, tps in measured():
+        print(f"measured_tiny[{plen},{gen}],{ttft*1e6:.0f},"
+              f"ttft={ttft*1e3:.0f}ms decode={tps:.1f}tok/s")
+    for plen, gen, ttft, tps in modeled_kv260():
+        print(f"modeled_kv260_0.73b[{plen},{gen}],{ttft*1e6:.0f},"
+              f"ttft={ttft:.2f}s decode={tps:.1f}tok/s "
+              f"(paper: ttft 0.45s@64 0.96s@128, 16-25 tok/s)")
+
+
+if __name__ == "__main__":
+    main()

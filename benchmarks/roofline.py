@@ -1,0 +1,147 @@
+"""§Roofline: three-term roofline per (arch × shape) on the single-pod mesh.
+
+Combines the dry-run artifacts (experiments/dryrun/*.json: memory analysis,
+HLO-parsed collective mix — structural cross-checks) with the trip-count-
+exact analytic model (benchmarks/analytic.py).  Emits a CSV + markdown table
+consumed by EXPERIMENTS.md.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import analytic
+from repro.configs import ARCHS, PAPER_ARCH, SHAPES, get_config, shape_applicable
+
+DRYRUN_DIR = "experiments/dryrun"
+OUT_CSV = "experiments/roofline.csv"
+OUT_MD = "experiments/roofline.md"
+
+
+def load_dryrun(arch, shape, mesh="16x16"):
+    path = os.path.join(DRYRUN_DIR, f"{arch}_{shape}_{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def build_table():
+    rows = []
+    for arch in ARCHS + [PAPER_ARCH]:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, reason = shape_applicable(cfg, shape)
+            dr = load_dryrun(arch, shape_name)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape_name,
+                             "skipped": reason})
+                continue
+            m = analytic.cell_model(arch, shape_name)
+            row = {
+                "arch": arch, "shape": shape_name,
+                "params_B": round(m.params_total / 1e9, 2),
+                "active_B": round(m.params_active / 1e9, 2),
+                "model_gflops_dev": round(m.model_flops / 1e9, 1),
+                "exec_gflops_dev": round(m.exec_flops / 1e9, 1),
+                "useful_ratio": round(m.model_flops / m.exec_flops, 3),
+                "hbm_GB_dev": round(m.hbm_bytes / 1e9, 3),
+                "coll_GB_dev": round(m.coll_bytes / 1e9, 3),
+                "compute_ms": round(m.compute_s * 1e3, 3),
+                "memory_ms": round(m.memory_s * 1e3, 3),
+                "collective_ms": round(m.collective_s * 1e3, 3),
+                "bottleneck": m.bottleneck,
+                "roofline_frac": round(m.roofline_fraction, 3),
+            }
+            if dr and dr.get("ok"):
+                row["dryrun_mem_GiB"] = round(
+                    dr["memory"]["peak_bytes_est"] / 2**30, 2)
+                row["dryrun_coll_mix"] = {
+                    k: round(v / 2**20, 1)
+                    for k, v in dr["collectives"].items() if k != "total"}
+            rows.append(row)
+    return rows
+
+
+HILLCLIMBED = [
+    # (arch, shape, opt-variant)  — §Perf cells, baseline vs optimized
+    ("qwen2-72b", "train_4k", ("int8fwd", "spmix")),
+    ("hymba-1.5b", "train_4k", ("dpzero1", "compress")),
+    ("bitnet-0.73b", "decode_32k", ("kv8",)),
+    ("qwen2-72b", "decode_32k", ("kv8",)),
+]
+
+
+def perf_rows():
+    out = []
+    for arch, shape, opt in HILLCLIMBED:
+        base = analytic.cell_model(arch, shape)
+        tuned = analytic.cell_model(arch, shape, opt=opt)
+        out.append((arch, shape, ",".join(opt), base, tuned))
+    return out
+
+
+def main():
+    rows = build_table()
+    os.makedirs("experiments", exist_ok=True)
+    cols = ["arch", "shape", "params_B", "active_B", "model_gflops_dev",
+            "exec_gflops_dev", "useful_ratio", "hbm_GB_dev", "coll_GB_dev",
+            "compute_ms", "memory_ms", "collective_ms", "bottleneck",
+            "roofline_frac", "dryrun_mem_GiB"]
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            if "skipped" in r:
+                f.write(f"{r['arch']},{r['shape']},SKIPPED\n")
+                continue
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    with open(OUT_MD, "w") as f:
+        f.write("| arch | shape | compute ms | memory ms | coll ms | "
+                "bottleneck | roofline frac | useful ratio | mem GiB/dev |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            if "skipped" in r:
+                f.write(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | — | — |\n")
+                continue
+            f.write(f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+                    f"{r['memory_ms']} | {r['collective_ms']} | "
+                    f"{r['bottleneck']} | {r['roofline_frac']} | "
+                    f"{r['useful_ratio']} | "
+                    f"{r.get('dryrun_mem_GiB', '—')} |\n")
+    with open(OUT_MD, "a") as f:
+        f.write("\n## §Perf hillclimbed cells: baseline vs optimized "
+                "(analytic terms, ms)\n\n")
+        f.write("| cell | variant | compute | memory | collective | "
+                "bottleneck | roofline frac |\n|---|---|---|---|---|---|---|\n")
+        for arch, shape, optname, base, tuned in perf_rows():
+            for label, m in (("baseline", base), (optname, tuned)):
+                f.write(f"| {arch} {shape} | {label} | "
+                        f"{m.compute_s*1e3:.3f} | {m.memory_s*1e3:.3f} | "
+                        f"{m.collective_s*1e3:.3f} | {m.bottleneck} | "
+                        f"{m.roofline_fraction:.3f} |\n")
+    print(f"wrote {OUT_CSV} and {OUT_MD} ({len(rows)} cells)")
+    print("\n# §Perf cells (baseline -> optimized):")
+    for arch, shape, optname, base, tuned in perf_rows():
+        print(f"{arch:15s} {shape:11s} {optname:18s} "
+              f"step {base.step_s*1e3:9.3f} -> {tuned.step_s*1e3:9.3f} ms  "
+              f"frac {base.roofline_fraction:.3f} -> "
+              f"{tuned.roofline_fraction:.3f}")
+    # console summary
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:18s} {r['shape']:12s} SKIP ({r['skipped'][:40]})")
+        else:
+            print(f"{r['arch']:18s} {r['shape']:12s} "
+                  f"bottleneck={r['bottleneck']:10s} "
+                  f"frac={r['roofline_frac']:6.3f} "
+                  f"c/m/l ms = {r['compute_ms']:8.3f}/"
+                  f"{r['memory_ms']:8.3f}/{r['collective_ms']:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

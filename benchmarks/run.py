@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table4     # one
+
+Each prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("paper_model", "benchmarks.paper_model"),
+    ("table1_throughput", "benchmarks.table1_throughput"),
+    ("table2_quality", "benchmarks.table2_quality"),
+    ("table3_resources", "benchmarks.table3_resources"),
+    ("table4_tlmm_ablation", "benchmarks.table4_tlmm_ablation"),
+    ("fig10_latency", "benchmarks.fig10_latency"),
+    ("fig11_breakdown", "benchmarks.fig11_breakdown"),
+    ("attention_ablation", "benchmarks.attention_ablation"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, module in BENCHES:
+        if only and only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            import importlib
+            importlib.import_module(module).main()
+            print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED: {failed}")
+        raise SystemExit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

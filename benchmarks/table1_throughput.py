@@ -1,0 +1,59 @@
+"""Paper Table 1 analog — cross-platform throughput / energy efficiency.
+
+We cannot measure an FPGA; we (a) validate the paper's KV260 numbers against
+the bandwidth roofline (paper_model), (b) measure our reduced BitNet
+end-to-end on this host, and (c) project the full 0.73B on TPU v5e single
+chip + pod from the analytic model, with tokens/joule at v5e typical power.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import analytic, paper_model
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serving import Request, ServingEngine
+
+V5E_POWER_W = 170.0  # chip+HBM typical
+
+
+def main():
+    print("name,us_per_call,derived")
+    pm = paper_model.build()
+    print(f"kv260_paper_decode,0,25 tok/s measured = "
+          f"{pm.paper_fraction_of_roofline*100:.0f}% of 17.1GB/s roofline")
+    print(f"kv260_paper_energy,0,5.2 tok/J (paper table 1)")
+
+    # measured: reduced model on this host
+    cfg = get_config("bitnet-0.73b").reduced(
+        n_layers=2, d_model=128, n_heads=4, d_ff=256, vocab_size=256)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    packed = transformer.pack_params(cfg, params)
+    eng = ServingEngine(cfg, packed, max_seq=96, batch_slots=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, 256, 32), max_new_tokens=32)
+            for _ in range(4)]
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    wall = time.perf_counter() - t0
+    total = sum(len(r.output) for r in reqs)
+    print(f"measured_tiny_host_decode,{wall/total*1e6:.0f},"
+          f"{total/wall:.1f} tok/s aggregate (reduced model, 1 CPU core)")
+
+    # projected: v5e
+    print(f"v5e_1chip_0.73b_decode,0,{pm.v5e_single_chip_tps:.0f} tok/s "
+          f"(packed stream / 819GB/s) = "
+          f"{pm.v5e_single_chip_tps / V5E_POWER_W:.1f} tok/J")
+    print(f"v5e_pod256_decode_32k,0,{pm.v5e_pod_tps_batch128:.0f} tok/s "
+          f"aggregate (batch 128, 32k ctx)")
+    pre = analytic.cell_model("bitnet-0.73b", "prefill_32k")
+    print(f"v5e_pod256_prefill_32k,0,"
+          f"{32 * 32768 / pre.step_s:.2e} tok/s aggregate")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 3 analog — per-module resource breakdown.
+
+The FPGA budget (LUT/FF/BRAM/URAM/DSP) maps on TPU to bytes held and bytes
+moved per module.  For BitNet 0.73B packed: weight bytes per module class,
+KV-cache bytes, and the VMEM working set each Pallas kernel claims under the
+analytic tiling model (core/params.py) — the URAM/BRAM analog."""
+
+from __future__ import annotations
+
+from benchmarks import analytic
+from repro.configs import get_config
+from repro.core import params as tparams
+from repro.core import ternary
+
+
+def main():
+    print("name,us_per_call,derived")
+    cfg = get_config("bitnet-0.73b")
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    bpw = ternary.bits_per_weight(cfg.group_size) / 8
+    mods = {
+        "attn_qkvo_packed_MB": 4 * d * d * L * bpw / 1e6,
+        "ffn_gate_up_packed_MB": 2 * d * ff * L * bpw / 1e6,
+        "ffn_down_packed_MB": ff * d * L * bpw / 1e6,
+        "embed_head_bf16_MB": cfg.vocab_size * d * 2 / 1e6,
+        "norm_scales_MB": (2 * L + 1) * d * 4 / 1e6,
+        "kv_cache_128ctx_MB": analytic._kv_cache_bytes(cfg, 1, 128) / 1e6,
+    }
+    total = sum(mods.values())
+    for k, v in mods.items():
+        print(f"{k},0,{v:.1f} ({v/total*100:.0f}%)")
+    print(f"total_weight_stream_MB,0,{total:.1f} "
+          f"(paper: 680M dec params at 1.67b/w + 49M embed)")
+    # VMEM claims per kernel (URAM analog): tlmm tiling for the 3 matmul sizes
+    for name, (m, n, k) in {
+        "tlmm_qkvo": (128, d, d), "tlmm_up": (128, d, ff),
+        "tlmm_down": (128, ff, d),
+    }.items():
+        t = tparams.select_tlmm_tiling(m, n, k, g=cfg.group_size)
+        print(f"vmem_{name},0,{t.vmem_bytes/1024:.0f}KiB "
+              f"(bm={t.bm} bn={t.bn} bk={t.bk})")
+
+
+if __name__ == "__main__":
+    main()

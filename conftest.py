@@ -1,0 +1,15 @@
+"""Pytest config: repo root on sys.path (for `benchmarks` imports) + marks.
+
+NB: tests run with the default 1-device jax; only the dry-run subprocess
+test touches the 512-device production mesh (in its own process).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: long-running (subprocess dry-run) tests")

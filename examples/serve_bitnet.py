@@ -1,0 +1,38 @@
+"""Serve a packed ternary model with batched requests + TTFT stats —
+the paper's end-to-end inference story (prefill AND decode first-class).
+
+Run:  PYTHONPATH=src python examples/serve_bitnet.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serving import Request, ServingEngine
+
+cfg = get_config("bitnet-0.73b").reduced(
+    n_layers=2, d_model=128, n_heads=4, d_ff=256, vocab_size=256)
+params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+packed = transformer.pack_params(cfg, params)
+
+rng = np.random.default_rng(0)
+requests = [
+    Request(prompt=rng.integers(0, cfg.vocab_size, size=plen),
+            max_new_tokens=16)
+    for plen in (8, 24, 16, 40, 12, 32)
+]
+engine = ServingEngine(cfg, packed, max_seq=64, batch_slots=3)
+t0 = time.perf_counter()
+engine.run(requests)
+wall = time.perf_counter() - t0
+
+total = sum(len(r.output) for r in requests)
+print(f"served {len(requests)} requests / {total} new tokens "
+      f"in {wall:.2f}s -> {total/wall:.1f} tok/s aggregate")
+for i, r in enumerate(requests):
+    print(f"  req{i}: prompt {len(r.prompt):3d} toks, "
+          f"TTFT {r.ttft_s*1e3:6.1f}ms, out {r.output[:8].tolist()}...")
+print("serve_bitnet OK")

@@ -1,0 +1,38 @@
+"""End-to-end driver: QAT-train a small ternary BitNet for a few hundred
+steps on synthetic data, with checkpointing + restart mid-run (the fault-
+tolerance path exercised for real).
+
+Run:  PYTHONPATH=src python examples/train_tiny_bitnet.py
+(~100M-param configuration scaled to this CPU; pass --steps to extend)
+"""
+
+import argparse
+import shutil
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_bitnet")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    half = args.steps // 2
+    print(f"=== phase 1: steps 0..{half} (then simulate a restart) ===")
+    _, losses1 = train("bitnet-0.73b", steps=half, batch=8, seq_len=128,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=25, reduced=True,
+                       lr=1e-3)
+    print(f"=== phase 2: resume from checkpoint -> step {args.steps} ===")
+    _, losses2 = train("bitnet-0.73b", steps=args.steps, batch=8,
+                       seq_len=128, ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                       reduced=True, lr=1e-3)
+    print(f"loss: start {losses1[0]:.3f} -> mid {losses1[-1]:.3f} "
+          f"-> end {losses2[-1]:.3f}")
+    assert losses2[-1] < losses1[0], "training did not learn"
+    print("train_tiny_bitnet OK (loss decreased across a restart)")
+
+
+if __name__ == "__main__":
+    main()

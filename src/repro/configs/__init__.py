@@ -1,0 +1,27 @@
+"""Architecture config registry: ``get_config(name)`` / ``ARCHS``."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable  # noqa: F401
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+ARCHS = [
+    "xlstm-350m",
+    "hymba-1.5b",
+    "musicgen-medium",
+    "internvl2-76b",
+    "granite-3-2b",
+    "command-r-35b",
+    "qwen1.5-0.5b",
+    "qwen2-72b",
+    "dbrx-132b",
+    "mixtral-8x22b",
+]
+
+# the paper's own model
+PAPER_ARCH = "bitnet-0.73b"

@@ -1,0 +1,3 @@
+"""Core: the paper's contribution — ternary quant, packing, BitLinear, tiling."""
+
+from repro.core import bitlinear, params, ternary  # noqa: F401

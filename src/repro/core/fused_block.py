@@ -1,0 +1,79 @@
+"""The TLMM-FUSE dataflow (paper Fig. 4a) as one composed kernel pipeline.
+
+On the FPGA, TeLLMe streams RMS-MAX → TLMM(gate,up) → dequant∘SiLU·mul∘requant
+→ TLMM(down) through FIFO channels without ever writing activations to DRAM
+in float.  The TPU equivalent composes our four Pallas kernels with the
+int8/int32 tensors flowing between them — no bf16 round-trips between the
+norm and the down-projection:
+
+    x ──rmsnorm_quant──► (int8, scale)
+        ├─tlmm gate──► int32 ┐
+        └─tlmm up  ──► int32 ┴─swiglu_quant──► (int8, scale)
+                                  └─tlmm down──► int32 ──dequant──► bf16
+
+``fused_ffn_packed`` is the public entry; equivalence with the unfused
+packed path is tested in tests/test_fused_block.py.  On CPU the kernels run
+interpret=True; the dataflow (and the bytes that never touch HBM in float)
+is the point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+from repro.kernels.rmsnorm_quant import ops as rq_ops
+from repro.kernels.swiglu_quant import ops as sq_ops
+from repro.kernels.tlmm import ops as tlmm_ops
+
+
+def fused_ffn_packed(mlp_packed: dict, norm_w: jax.Array, x: jax.Array, *,
+                     g: int = ternary.DEFAULT_G, eps: float = 1e-5,
+                     interpret: bool | None = None) -> jax.Array:
+    """RMSNorm + SwiGLU FFN over packed ternary weights, fully fused.
+
+    mlp_packed: {"gate": {codes, gamma}, "up": {...}, "down": {...}}
+    norm_w: (d,) RMSNorm scale;  x: (..., d) float.
+    Returns the FFN output in x.dtype (residual add is the caller's).
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+
+    # 1. RMS-MAX unit: norm + absmax + int8, one VMEM pass
+    xq, xs = rq_ops.rmsnorm_quant(x2, norm_w, eps=eps, interpret=interpret)
+
+    # 2. TLMM engine: gate and up projections on the packed stream
+    acc_g = tlmm_ops.tlmm(xq, mlp_packed["gate"]["codes"], g=g, n=d,
+                          interpret=interpret)
+    acc_u = tlmm_ops.tlmm(xq, mlp_packed["up"]["codes"], g=g, n=d,
+                          interpret=interpret)
+
+    # 3. TLMM-FUSE elementwise unit: dequant ∘ SiLU·mul ∘ requant
+    gs = (xs * mlp_packed["gate"]["gamma"]).astype(jnp.float32)
+    us = (xs * mlp_packed["up"]["gamma"]).astype(jnp.float32)
+    hq, hs = sq_ops.swiglu_quant(acc_g, acc_u, gs, us, interpret=interpret)
+
+    # 4. TLMM down projection + epilogue dequant
+    acc_d = tlmm_ops.tlmm(hq, mlp_packed["down"]["codes"], g=g,
+                          n=hq.shape[-1], interpret=interpret)
+    y = acc_d.astype(jnp.float32) * hs * mlp_packed["down"]["gamma"]
+    return y.astype(x.dtype).reshape(lead + (y.shape[-1],))
+
+
+def unfused_reference(mlp_packed: dict, norm_w: jax.Array, x: jax.Array, *,
+                      g: int = ternary.DEFAULT_G,
+                      eps: float = 1e-5) -> jax.Array:
+    """Same math through the plain jnp packed path (oracle)."""
+    from repro.core import bitlinear
+    from repro.models import layers
+
+    h = layers.rmsnorm({"w": norm_w}, x, eps)
+    gate = bitlinear.apply_packed(mlp_packed["gate"], h, g=g,
+                                  out_dtype=jnp.float32)
+    up = bitlinear.apply_packed(mlp_packed["up"], h, g=g,
+                                out_dtype=jnp.float32)
+    act = jax.nn.silu(gate) * up
+    return bitlinear.apply_packed(mlp_packed["down"], act.astype(x.dtype),
+                                  g=g, out_dtype=x.dtype)

@@ -1,0 +1,110 @@
+"""Analytic TLMM tiling-parameter selection — the TPU analog of TeLLMe eq. 7-9.
+
+The paper sizes its TLMM engine (G, T, Q) against URAM word width (72 b),
+URAM depth (4096) and a LUT budget (eq. 7: T from URAM width; eq. 8: LUT
+constraint; eq. 9: URAM block count U <= N_URAM).
+
+On TPU the analogous resources are:
+  * VMEM capacity (~128 MiB on v5e, of which a kernel should claim less),
+  * MXU geometry (128x128 systolic array; operand tiles want multiples of
+    (8, 128) for f32/int8 lane packing),
+  * HBM burst efficiency (block last-dims of 128).
+
+Given a matmul (m, n, k) with base-3 packed weights (group g along n), choose
+BlockSpec tile sizes (bm, bn, bk) that (a) fit a VMEM budget, (b) keep MXU
+dims 128-aligned, and (c) maximize the compute-per-byte of the weight stream.
+This module is pure Python (host-side), mirroring how the paper's parameter
+selection is an offline analytic step, and is unit-tested against the VMEM
+accounting it claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import ternary
+
+VMEM_BYTES_V5E = 128 * 1024 * 1024
+MXU_LANE = 128
+MXU_SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TLMMTiling:
+    bm: int  # activation rows per block
+    bn: int  # reduction elements per block (multiple of g * MXU_LANE alignment)
+    bk: int  # output columns per block
+    g: int   # ternary group size
+    vmem_bytes: int  # modeled VMEM working set
+
+    @property
+    def packed_rows(self) -> int:
+        return self.bn // self.g
+
+
+def tile_vmem_bytes(bm: int, bn: int, bk: int, g: int,
+                    acc_bytes: int = 4, act_bytes: int = 1) -> int:
+    """Model the kernel working set: act block + packed wt block + unpacked wt
+    block (registers modeled as VMEM for safety) + int32 accumulator."""
+    act = bm * bn * act_bytes
+    packed = (bn // g) * bk  # uint8 codes
+    unpacked = bn * bk       # int8 decoded tile
+    acc = bm * bk * acc_bytes
+    return act + packed + unpacked + acc
+
+
+def select_tlmm_tiling(m: int, n: int, k: int, g: int = ternary.DEFAULT_G,
+                       vmem_budget: int = VMEM_BYTES_V5E // 4) -> TLMMTiling:
+    """Pick (bm, bn, bk) under a VMEM budget — the eq. 7-9 analog.
+
+    Strategy (mirrors the paper's 'table as large as possible, word width fully
+    used'): maximize bn (weight-stream reuse per activation load) subject to
+    alignment bn % (g * lcm-with-128)) == 0, then bk, then bm.
+    """
+    if n % g != 0:
+        n = ternary.pad_to_group(n, g)
+    # bn must be a multiple of g (whole groups) and of 128 (lane alignment).
+    bn_align = g * MXU_LANE // math.gcd(g, MXU_LANE)
+    bk_align = MXU_LANE
+    bm_align = MXU_SUBLANE
+
+    bn = min(n, _round_down_multiple(2048, bn_align) or bn_align)
+    bn = max(bn_align, _round_down_multiple(bn, bn_align))
+    bk = min(k, 512)
+    bk = max(bk_align, _round_down_multiple(bk, bk_align))
+    bm = min(m, 256)
+    bm = max(bm_align, _round_down_multiple(bm, bm_align)) if m >= bm_align else m
+
+    # Shrink in priority order (bm first: activations are the cheap stream in
+    # decode; weight-stream blocks carry the compression win) until we fit.
+    while tile_vmem_bytes(bm, bn, bk, g) > vmem_budget:
+        if bm > bm_align:
+            bm = max(bm_align, bm // 2)
+        elif bk > bk_align:
+            bk = max(bk_align, bk // 2)
+        elif bn > bn_align:
+            bn = max(bn_align, _round_down_multiple(bn // 2, bn_align))
+        else:
+            break
+    return TLMMTiling(bm=bm, bn=bn, bk=bk, g=g,
+                      vmem_bytes=tile_vmem_bytes(bm, bn, bk, g))
+
+
+def _round_down_multiple(x: int, mult: int) -> int:
+    return (x // mult) * mult
+
+
+def weight_stream_bytes(n: int, k: int, g: int) -> int:
+    """HBM bytes for one full weight read, packed (the decode-phase cost)."""
+    return (ternary.pad_to_group(n, g) // g) * k
+
+
+def dense_int8_bytes(n: int, k: int) -> int:
+    return n * k
+
+
+def compression_ratio(n: int, k: int, g: int = ternary.DEFAULT_G,
+                      dense_bits: int = 16) -> float:
+    """Weight-traffic compression vs a dense reference (default bf16)."""
+    return (n * k * dense_bits / 8) / weight_stream_bytes(n, k, g)

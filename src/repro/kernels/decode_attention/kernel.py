@@ -1,0 +1,100 @@
+"""Decode attention — the paper's DA unit (§3.7), TPU-adapted.
+
+Decode attention is a single query token against a long KV cache: memory-
+bandwidth-bound on the cache stream, negligible compute.  Exactly as the
+paper de-fuses QKᵀ (K-cache stream) from the V aggregation (V-cache stream)
+and keeps the score vector on-chip, this kernel streams the cache in (bkv, d)
+blocks through VMEM, maintains the online-softmax state (m, l, acc) in VMEM
+scratch, and never writes scores to HBM.  Positions ≥ cache_len (ring-buffer
+slack, paddings) are masked via a scalar-prefetched length.
+
+A split-KV (flash-decoding) wrapper in ops.py shards the sequence dimension —
+the long-context path a 2-port DDR FPGA cannot take but a TPU pod can.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, bkv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]
+    k_start = ki * bkv
+    # Skip blocks entirely beyond the live cache (no work issued).
+    @pl.when(k_start < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        mask = k_ids < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cache_len: jax.Array, *, scale: float, bkv: int,
+                            interpret: bool) -> jax.Array:
+    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar array.
+
+    Returns (b, h, 1, d)."""
+    b, h, _, d = q.shape
+    kv_h, s = k.shape[1], k.shape[2]
+    assert h % kv_h == 0 and s % bkv == 0
+    group = h // kv_h
+    grid = (b, h, s // bkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, ki, len_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, ki, len_ref: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, ki, len_ref: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bi, hi, ki, len_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bkv=bkv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(cache_len.reshape(1).astype(jnp.int32), q, k, v)

@@ -1,0 +1,77 @@
+"""Public wrappers for decode attention: streaming kernel + split-KV variant."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.decode_attention import kernel
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, bkv: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Single-token GQA attention against a (possibly partially filled) cache.
+
+    q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar array.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, _, d = q.shape
+    s = k.shape[2]
+    scale = 1.0 / float(d) ** 0.5
+    bkv = min(bkv, s)
+    pad = (-s) % bkv
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    return kernel.decode_attention_pallas(
+        q, k, v, jnp.asarray(cache_len), scale=scale, bkv=bkv,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits", "bkv", "interpret"))
+def decode_attention_splitk(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cache_len: jax.Array, *, n_splits: int = 4,
+                            bkv: int = 256,
+                            interpret: bool | None = None) -> jax.Array:
+    """Flash-decoding: shard the KV sequence into n_splits independent chunks,
+    compute per-chunk partial (acc, m, l) via log-sum-exp pieces, combine.
+
+    This is the TPU long-context move the paper's single DDR channel cannot
+    make — chunks map onto sequence-sharded devices or onto parallel grid
+    work.  Implemented with the jnp oracle math per chunk so it also serves
+    as the sequence-parallel reference for the sharded serve path.
+    """
+    b, h, _, d = q.shape
+    kv_h, s = k.shape[1], k.shape[2]
+    assert s % n_splits == 0
+    chunk = s // n_splits
+    scale = 1.0 / float(d) ** 0.5
+    kc = k.reshape(b, kv_h, n_splits, chunk, d)
+    vc = v.reshape(b, kv_h, n_splits, chunk, d)
+    kc = jnp.repeat(kc, h // kv_h, axis=1)
+    vc = jnp.repeat(vc, h // kv_h, axis=1)
+    base = jnp.arange(n_splits) * chunk
+    pos = base[:, None] + jnp.arange(chunk)[None, :]          # (splits, chunk)
+    sc = jnp.einsum("bhqd,bhckd->bhcqk", q.astype(jnp.float32),
+                    kc.astype(jnp.float32)) * scale           # (b,h,c,1,chunk)
+    mask = (pos < cache_len)[None, None, :, None, :]
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)                   # (b,h,c,1,1)
+    p = jnp.where(mask, jnp.exp(sc - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bhcqk,bhckd->bhcqd", p, vc.astype(jnp.float32))
+    # Combine chunks: global max, rescale partial numerators/denominators.
+    m_g = jnp.max(m, axis=2, keepdims=True)
+    alpha = jnp.exp(m - m_g)
+    l_g = jnp.sum(l * alpha, axis=2)                          # (b,h,1,1)
+    acc_g = jnp.sum(acc * alpha, axis=2)                      # (b,h,1,d)
+    return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for decode attention (single token vs KV cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, cache_len, *, scale=None):
+    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int scalar."""
+    b, h, _, d = q.shape
+    kv_h, s = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k = jnp.repeat(k, h // kv_h, axis=1)
+    v = jnp.repeat(v, h // kv_h, axis=1)
+    s_vec = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    mask = (jnp.arange(s) < cache_len)[None, None, None, :]
+    s_vec = jnp.where(mask, s_vec, -1e30)
+    p = jax.nn.softmax(s_vec, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_prefill import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,122 @@
+"""Fused prefill attention — the paper's RPA unit (§3.6), TPU-adapted.
+
+The paper's reversed-reordered prefill attention is online-softmax fused
+attention (eq. 11 == Flash-Attention-2 with block 1) scheduled so that
+causal-masked work is *never issued* and the S = QKᵀ matrix never exists in
+off-chip memory.  The reversal itself exists to keep AXI bursts
+address-incremental — an FPGA artifact.  On TPU the same two goals map to:
+
+  * online softmax with per-q-block running (m, l, acc) carried in VMEM
+    scratch across the kv grid dimension (never materialize S in HBM);
+  * *block skipping*: grid cells with kv_block > q_block are masked out with
+    ``pl.when`` so fully-masked tiles issue zero MXU work — the TPU
+    equivalent of "the mask never generates work".
+
+GQA is handled in the BlockSpec index maps (q head h reads kv head
+h // group), so no KV replication is materialized.
+
+The naive baseline from the paper's Fig. 6b (compute all N² scores, then
+mask) is ``naive_attention`` in ref.py and is benchmarked in
+benchmarks/attention_ablation.py (paper §4.4.2: 1.88×; we reproduce ≈2×).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, bq: int, bkv: int, causal: bool,
+                  window: int | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-skip: with causal masking, tiles strictly above the diagonal are
+    # never computed (the RPA "no redundant masked computation" property).
+    # With a sliding window, tiles entirely left of the window are skipped too.
+    q_start = qi * bq
+    k_start = ki * bkv
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        # newest q in block attends back `window-1`; skip fully-stale kv tiles
+        run = jnp.logical_and(run, k_start + bkv - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)   # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)   # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)   # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_ids <= q_ids)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_ids > q_ids - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (can happen in the diagonal block's top rows)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         scale: float, causal: bool, window: int | None,
+                         bq: int, bkv: int, interpret: bool) -> jax.Array:
+    """q: (b, h, s, d); k, v: (b, kv_h, s, d) -> (b, h, s, d)."""
+    b, h, s, d = q.shape
+    kv_h = k.shape[1]
+    assert h % kv_h == 0 and s % bq == 0 and s % bkv == 0
+    group = h // kv_h
+    grid = (b, h, s // bq, s // bkv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
+                          causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""Public wrapper for the fused prefill attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_prefill import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",
+                                             "interpret"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  bq: int = 128, bkv: int = 128,
+                  interpret: bool | None = None) -> jax.Array:
+    """Causal (optionally sliding-window) GQA flash attention.
+
+    q: (b, h, s, d); k, v: (b, kv_h, s, d).  Pads s to the block multiple;
+    padded keys are masked by causality (they sit beyond every real query).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, s, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    import math
+    bq = min(bq, s)
+    bkv = min(bkv, s)
+    pad = (-s) % math.lcm(bq, bkv)
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = kernel.flash_prefill_pallas(q, k, v, scale=scale, causal=causal,
+                                      window=window, bq=bq, bkv=bkv,
+                                      interpret=interpret)
+    return out[:, :, :s]

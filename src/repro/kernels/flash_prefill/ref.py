@@ -1,0 +1,48 @@
+"""Oracles for prefill attention.
+
+``attention_ref`` — numerically exact causal/windowed GQA attention.
+``naive_attention`` — the paper's Fig. 6b baseline: computes the FULL N×N
+score matrix (including masked positions) and materializes it before the
+softmax, i.e. the redundant-masked-computation scheduling that the RPA unit
+eliminates.  Both give identical outputs; they differ in work and memory,
+which is what benchmarks/attention_ablation.py measures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_kv(x: jax.Array, h: int) -> jax.Array:
+    b, kv_h, s, d = x.shape
+    return jnp.repeat(x, h // kv_h, axis=1)
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=None):
+    """q: (b, h, s, d); k, v: (b, kv_h, s, d)."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    q_ids = jnp.arange(s)[:, None]
+    k_ids = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), jnp.bool_)
+    if causal:
+        mask = jnp.logical_and(mask, k_ids <= q_ids)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_ids > q_ids - window)
+    s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, scale=None, causal=True, window=None):
+    """Fig. 6b baseline — identical math, full dense S materialized.
+
+    Kept as a distinct entry point so the ablation can lower/cost-analyse it
+    separately from the fused kernel."""
+    return attention_ref(q, k, v, scale=scale, causal=causal, window=window)

@@ -1,0 +1,53 @@
+"""Fused RMSNorm + ABSMAX int8 quant — the paper's RMS-MAX unit (§3.5).
+
+One VMEM pass per row block: RMS statistics accumulate in f32 (the paper
+upcasts to FP32 for the accumulation), the norm is applied with the FP16/bf16
+RMSNorm weight, the per-token absolute maximum is found on the normalized
+values, and the int8 quantization happens before anything leaves VMEM.  The
+scale needed by the downstream dequant is emitted as a second output —
+exactly the decoupled max-find/quant interface of the RMS-MAX unit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def rmsnorm_quant_kernel(x_ref, w_ref, q_ref, scale_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)             # (bm, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)  # FP32 accumulation
+    xn = x * jax.lax.rsqrt(var + eps)
+    xn = xn * w_ref[...].astype(jnp.float32)[None, :]
+    amax = jnp.maximum(jnp.max(jnp.abs(xn), axis=-1, keepdims=True), 1e-5)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xn / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def rmsnorm_quant_pallas(x: jax.Array, w: jax.Array, *, eps: float, bm: int,
+                         interpret: bool):
+    m, d = x.shape
+    assert m % bm == 0
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(rmsnorm_quant_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,27 @@
+"""Public wrapper for the fused RMSNorm+quant kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.rmsnorm_quant import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm_quant(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+                  bm: int = 8, interpret: bool | None = None):
+    """(..., d) float -> ((..., d) int8, (..., 1) f32 scale)."""
+    if interpret is None:
+        interpret = default_interpret()
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    m = xf.shape[0]
+    bm_eff = bm if m % bm == 0 else 1
+    q, scale = kernel.rmsnorm_quant_pallas(xf, w, eps=eps, bm=bm_eff,
+                                           interpret=interpret)
+    return q.reshape(lead + (d,)), scale.reshape(lead + (1,))

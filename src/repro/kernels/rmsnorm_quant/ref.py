@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the RMS-MAX unit."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_quant_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xn), axis=-1, keepdims=True), 1e-5)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xn / scale), -127, 127).astype(jnp.int8)
+    return q, scale

@@ -1,0 +1,1 @@
+from repro.kernels.swiglu_quant import kernel, ops, ref  # noqa: F401

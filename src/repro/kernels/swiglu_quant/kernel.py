@@ -1,0 +1,45 @@
+"""Fused dequant ∘ SiLU·mul ∘ requant — the TLMM-FUSE elementwise path (§3.3).
+
+Consumes the raw int32 accumulators of the gate and up TLMM projections plus
+their dequant scales, applies SiLU(gate)·up in f32, finds the per-token absmax
+and emits int8 + scale for the down projection — the whole SwiGLU glue between
+three ternary matmuls without touching HBM in float."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def swiglu_quant_kernel(gate_ref, up_ref, gscale_ref, uscale_ref,
+                        q_ref, scale_ref):
+    g = gate_ref[...].astype(jnp.float32) * gscale_ref[...]  # dequant
+    u = up_ref[...].astype(jnp.float32) * uscale_ref[...]
+    h = (g * jax.nn.sigmoid(g)) * u                          # SiLU(g) * u
+    amax = jnp.maximum(jnp.max(jnp.abs(h), axis=-1, keepdims=True), 1e-5)
+    scale = amax / 127.0
+    q_ref[...] = jnp.clip(jnp.round(h / scale), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def swiglu_quant_pallas(gate: jax.Array, up: jax.Array, gscale: jax.Array,
+                        uscale: jax.Array, *, bm: int, interpret: bool):
+    m, f = gate.shape
+    assert m % bm == 0
+    grid = (m // bm,)
+    row = pl.BlockSpec((bm, f), lambda i: (i, 0))
+    sc = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        swiglu_quant_kernel,
+        grid=grid,
+        in_specs=[row, row, sc, sc],
+        out_specs=[row, sc],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, f), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gate, up, gscale, uscale)

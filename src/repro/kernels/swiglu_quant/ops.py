@@ -1,0 +1,30 @@
+"""Public wrapper for the fused SwiGLU dequant/requant kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.swiglu_quant import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def swiglu_quant(gate_i32: jax.Array, up_i32: jax.Array, gscale: jax.Array,
+                 uscale: jax.Array, *, bm: int = 8,
+                 interpret: bool | None = None):
+    """int32 gate/up accumulators + f32 scales -> (int8, f32 scale)."""
+    if interpret is None:
+        interpret = default_interpret()
+    lead = gate_i32.shape[:-1]
+    f = gate_i32.shape[-1]
+    gf = gate_i32.reshape(-1, f)
+    uf = up_i32.reshape(-1, f)
+    gs = gscale.reshape(-1, 1)
+    us = uscale.reshape(-1, 1)
+    m = gf.shape[0]
+    bm_eff = bm if m % bm == 0 else 1
+    q, scale = kernel.swiglu_quant_pallas(gf, uf, gs, us, bm=bm_eff,
+                                          interpret=interpret)
+    return q.reshape(lead + (f,)), scale.reshape(lead + (1,))

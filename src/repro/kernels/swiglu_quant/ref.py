@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused SwiGLU requant path."""
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_quant_ref(gate_i32: jax.Array, up_i32: jax.Array,
+                     gscale: jax.Array, uscale: jax.Array):
+    g = gate_i32.astype(jnp.float32) * gscale
+    u = up_i32.astype(jnp.float32) * uscale
+    h = (g * jax.nn.sigmoid(g)) * u
+    amax = jnp.maximum(jnp.max(jnp.abs(h), axis=-1, keepdims=True), 1e-5)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(h / scale), -127, 127).astype(jnp.int8)
+    return q, scale

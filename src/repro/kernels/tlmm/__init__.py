@@ -1,0 +1,1 @@
+from repro.kernels.tlmm import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,73 @@
+"""TLMM decode-to-MXU Pallas kernel.
+
+TPU adaptation of TeLLMe's table-lookup ternary matmul (DESIGN.md §2): the
+weight stream stays base-3 packed (1.6 bits/weight) through HBM *and* VMEM;
+each grid step unpacks one (bn//g, bk) uint8 code block into a (bn, bk) int8
+{-1,0,+1} tile in registers and feeds the MXU with an int8 dot accumulating
+into an int32 output block.  HBM weight traffic is exactly the packed bytes —
+the paper's bandwidth win — while compute runs at MXU int8 line rate instead
+of through LUT fabric.
+
+Grid: (m_tiles, k_tiles, n_tiles); the reduction (n) dim is innermost so the
+output block is revisited and accumulated in place.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_block(codes: jax.Array, g: int) -> jax.Array:
+    """uint8 codes (rows, bk) -> int8 ternary (rows*g, bk), in-register."""
+    c = codes.astype(jnp.int32)
+    digits = []
+    for _ in range(g):
+        digits.append((c % 3 - 1).astype(jnp.int8))
+        c = c // 3
+    w = jnp.stack(digits, axis=1)  # (rows, g, bk)
+    return w.reshape(codes.shape[0] * g, codes.shape[1])
+
+
+def tlmm_kernel(a_ref, codes_ref, out_ref, *, g: int):
+    """One (bm, bk) output block, accumulating over the packed-n grid dim."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]                       # (bm, bn) int8
+    w = _unpack_block(codes_ref[...], g)  # (bn, bk) int8, lives in VREGs
+    out_ref[...] += jax.lax.dot_general(
+        a, w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def tlmm_pallas(a_q: jax.Array, codes: jax.Array, *, g: int,
+                bm: int, bn: int, bk: int, interpret: bool) -> jax.Array:
+    """Blocked packed ternary matmul.
+
+    a_q:   (m, n) int8 activations, n a multiple of bn.
+    codes: (n // g, k) uint8, k a multiple of bk; bn a multiple of g.
+    Returns (m, k) int32.
+    """
+    m, n = a_q.shape
+    k = codes.shape[1]
+    assert n % bn == 0 and k % bk == 0 and m % bm == 0 and bn % g == 0
+    grid = (m // bm, k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(tlmm_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bn // g, bk), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32),
+        interpret=interpret,
+    )(a_q, codes)

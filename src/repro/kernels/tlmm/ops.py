@@ -1,0 +1,69 @@
+"""Public jit'd wrapper for the TLMM decode-to-MXU kernel: padding + tiling."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import params as tparams
+from repro.core import ternary
+from repro.kernels import default_interpret
+from repro.kernels.tlmm import kernel
+
+
+def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "n", "bm", "bn", "bk",
+                                             "interpret"))
+def tlmm(a_q: jax.Array, codes: jax.Array, *, g: int = ternary.DEFAULT_G,
+         n: int | None = None, bm: int | None = None, bn: int | None = None,
+         bk: int | None = None, interpret: bool | None = None) -> jax.Array:
+    """Packed ternary matmul: (m, n) int8 x (ceil(n/g), k) uint8 -> (m, k) int32.
+
+    Pads every dim to the selected block multiples (the paper's WBMU padding,
+    §3.4.2) and slices the result back.  Block sizes default to the analytic
+    VMEM model in core/params.py (eq. 7-9 analog).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, n_in = a_q.shape
+    n = n if n is not None else n_in
+    k = codes.shape[1]
+
+    if bm is None or bn is None or bk is None:
+        t = tparams.select_tlmm_tiling(m, n, k, g=g)
+        bm = bm or min(t.bm, 128)
+        bn = bn or min(t.bn, 1280)
+        bk = bk or min(t.bk, 256)
+    bm = max(1, min(bm, m)) if m < 8 else bm
+
+    # Zero-pad: activations along m and n (codes already whole groups; pad k).
+    # If codes were row-padded (WBMU alignment), grow activations to match.
+    a = a_q[:, :n]
+    if codes.shape[0] * g > a.shape[1]:
+        a = _pad_dim(a, 1, codes.shape[0] * g)[:, :codes.shape[0] * g]
+    a = _pad_dim(_pad_dim(a, 1, bn), 0, bm)
+    # codes rows must reach a.shape[1] // g
+    rows_needed = a.shape[1] // g
+    c = codes
+    if c.shape[0] < rows_needed:
+        # pad groups with code 'all-zero weights' = digits (1,1,..) value
+        zero_code = sum(3 ** i for i in range(g))
+        c = jnp.concatenate(
+            [c, jnp.full((rows_needed - c.shape[0], k), zero_code, jnp.uint8)],
+            axis=0)
+    c = _pad_dim(c, 1, bk)
+
+    out = kernel.tlmm_pallas(a, c, g=g, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return out[:m, :k]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the TLMM kernel."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+def tlmm_ref(a_q: jax.Array, codes: jax.Array, g: int,
+             n: int | None = None) -> jax.Array:
+    """(m, n) int8 x packed (n/g, k) uint8 -> (m, k) int32."""
+    n = n if n is not None else codes.shape[0] * g
+    wt = ternary.unpack_ternary(codes, g, n)
+    return jnp.dot(a_q[:, :n].astype(jnp.int32), wt.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.tlmm_lut import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""Paper-faithful table-lookup matmul (TLMM Method 3, full table) in Pallas.
+
+Faithful port of TeLLMe §3.2: per grid step,
+  1. *Precompute* (the adder-tree stage): all 3^g partial sums of every
+     activation group are built at once as a tiny matmul against the
+     enumeration matrix C ∈ {-1,0,1}^{g×3^g} — tables (bm, bn/g, 3^g).
+     On the FPGA this is T parallel adder trees filling distributed-RAM
+     tables; on TPU it is an MXU-friendly (g × 3^g) dot.
+  2. *Lookup*: each packed weight code addresses its group's table
+     (take_along_axis == the URAM read port), and the looked-up partial sums
+     are accumulated over groups into the int32 output block.
+
+This variant exists to reproduce the paper's ablation (Table 4): on TPU the
+gather in stage 2 runs on the VPU and loses to the decode-to-MXU kernel — the
+quantitative comparison is benchmarks/table4_tlmm_ablation.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+
+
+def tlmm_lut_kernel(a_ref, codes_ref, out_ref, *, g: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.int32)              # (bm, bn)
+    bm, bn = a.shape
+    n_groups = bn // g
+    a_grouped = a.reshape(bm * n_groups, g)
+    # Enumeration matrix C built in-kernel from iota (no captured constants):
+    # C[i, c] = ((c // 3^i) % 3) - 1.
+    codes_iota = jax.lax.broadcasted_iota(jnp.int32, (g, 3 ** g), 1)
+    pow3 = (3 ** jax.lax.broadcasted_iota(jnp.int32, (g, 3 ** g), 0))
+    c_mat = (codes_iota // pow3) % 3 - 1                     # (g, 3^g)
+    # Stage 1 — precompute unit: every possible group partial sum.
+    tables = jax.lax.dot_general(
+        a_grouped, c_mat, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).reshape(bm, n_groups, 3 ** g)
+    # Stage 2 — table lookup per (group, output column) + accumulate.
+    codes = codes_ref[...].astype(jnp.int32)      # (n_groups, bk)
+    bk = codes.shape[1]
+    idx = jnp.broadcast_to(codes[None], (bm, n_groups, bk))
+    looked = jnp.take_along_axis(tables, idx, axis=2)  # (bm, n_groups, bk)
+    out_ref[...] += jnp.sum(looked, axis=1).astype(jnp.int32)
+
+
+def tlmm_lut_pallas(a_q: jax.Array, codes: jax.Array, *, g: int,
+                    bm: int, bn: int, bk: int, interpret: bool) -> jax.Array:
+    m, n = a_q.shape
+    k = codes.shape[1]
+    assert n % bn == 0 and k % bk == 0 and m % bm == 0 and bn % g == 0
+    grid = (m // bm, k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(tlmm_lut_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bn // g, bk), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32),
+        interpret=interpret,
+    )(a_q, codes)

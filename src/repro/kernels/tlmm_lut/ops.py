@@ -1,0 +1,44 @@
+"""Public wrapper for the paper-faithful LUT matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+from repro.kernels import default_interpret
+from repro.kernels.tlmm import ops as tlmm_ops
+from repro.kernels.tlmm_lut import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("g", "bm", "bn", "bk",
+                                             "interpret"))
+def tlmm_lut(a_q: jax.Array, codes: jax.Array, *, g: int = ternary.PAPER_G,
+             bm: int = 8, bn: int | None = None, bk: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """Table-lookup ternary matmul (paper Method 3). Defaults to the paper's
+    G=3 (27-entry tables)."""
+    if interpret is None:
+        interpret = default_interpret()
+    m, n = a_q.shape
+    k = codes.shape[1]
+    if bn is None:
+        bn = min(ternary.pad_to_group(n, g), 16 * g * 8)
+        bn -= bn % g
+    bm = min(bm, m) if m < 8 else bm
+    bk = min(bk, k) if k < 128 else bk
+
+    a = tlmm_ops._pad_dim(tlmm_ops._pad_dim(a_q, 1, bn), 0, bm)
+    rows_needed = a.shape[1] // g
+    c = codes
+    if c.shape[0] < rows_needed:
+        zero_code = sum(3 ** i for i in range(g))
+        c = jnp.concatenate(
+            [c, jnp.full((rows_needed - c.shape[0], k), zero_code, jnp.uint8)],
+            axis=0)
+    c = tlmm_ops._pad_dim(c, 1, bk)
+    out = kernel.tlmm_lut_pallas(a, c, g=g, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret)
+    return out[:m, :k]

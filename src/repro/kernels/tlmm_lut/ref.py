@@ -1,0 +1,3 @@
+"""Oracle for the table-lookup matmul: core/ternary.ternary_matmul_lut_ref."""
+
+from repro.core.ternary import ternary_matmul_lut_ref as tlmm_lut_ref  # noqa: F401

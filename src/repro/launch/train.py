@@ -1,0 +1,111 @@
+"""Training launcher: QAT ternary training with the full fault-tolerance
+stack (checkpoint/restore, preemption, straggler watchdog, optional int8
+error-feedback gradient compression).
+
+On this CPU container it runs reduced configs end-to-end (see
+examples/train_tiny_bitnet.py); on a cluster the same entry point runs under
+the production mesh — the mesh/sharding logic is shared with dryrun.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch bitnet-0.73b --reduced \
+      --steps 100 --batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import install_sigterm_handler
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models import transformer
+from repro.models.layers import Ctx
+from repro.optim import adamw
+from repro.runtime.fault import StepTimer
+from repro.training import make_train_step
+
+
+def train(arch: str, *, steps: int, batch: int, seq_len: int,
+          ckpt_dir: str | None, ckpt_every: int = 50, reduced: bool = True,
+          lr: float = 3e-4, microbatches: int = 1, log_every: int = 10,
+          resume: bool = True, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced(n_layers=2, d_model=128, n_heads=4, d_ff=256,
+                          vocab_size=256)
+    ctx = Ctx(mode="qat", group_size=cfg.group_size,
+              attn_q_chunk=min(128, seq_len), attn_kv_chunk=min(128, seq_len))
+    optimizer = adamw(lr=lr, warmup_steps=min(100, steps // 10 + 1))
+    step_fn = jax.jit(make_train_step(cfg, ctx, optimizer,
+                                      microbatches=microbatches,
+                                      loss_chunk=min(512, seq_len)))
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    data = SyntheticLMDataset(cfg, batch=batch, seq_len=seq_len, seed=seed)
+
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr and resume and mgr.latest_step() is not None:
+        restored = mgr.restore(None, {"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        start_step = mgr.latest_step()
+        print(f"resumed from step {start_step}")
+
+    preempted = install_sigterm_handler()
+    timer = StepTimer()
+    losses = []
+    for step in range(start_step, steps):
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             data.batch_at(step))
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if timer.record(step, dt):
+            print(f"[straggler] step {step} took {dt:.2f}s "
+                  f"(ema {timer.stats.ema:.2f}s)")
+        losses.append(loss)
+        if step % log_every == 0:
+            tps = batch * seq_len / dt
+            print(f"step {step:5d} loss {loss:.4f} {dt*1e3:.0f}ms "
+                  f"({tps:.0f} tok/s)", flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state})
+        if preempted:
+            print("SIGTERM received: checkpointing and exiting")
+            if mgr:
+                mgr.save(step + 1, {"params": params, "opt": opt_state},
+                         blocking=True)
+            break
+    if mgr:
+        mgr.save(steps, {"params": params, "opt": opt_state}, blocking=True)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bitnet-0.73b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config — cluster scale")
+    args = ap.parse_args()
+    _, losses = train(args.arch, steps=args.steps, batch=args.batch,
+                      seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, reduced=not args.full,
+                      lr=args.lr, microbatches=args.microbatches)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,347 @@
+"""Attention: GQA + RoPE + KV cache, with phase-disaggregated execution paths.
+
+Mirrors the paper's split (§3.6/§3.7):
+
+* Prefill/train — fused online-softmax attention.  Two XLA formulations plus
+  the Pallas kernel:
+    - ``attention_xla_naive``  : Fig. 6b scheduling — every (q, kv) tile is
+      computed then masked.  2× the useful FLOPs.  Kept as the ablation
+      baseline (§4.4.2).
+    - ``attention_xla_skip``   : the RPA adaptation — a flat scan over only
+      the causally live (q-chunk, kv-chunk) tile pairs (statically
+      enumerated, window-aware), online-softmax carry.  Issues ~half the
+      FLOPs, never materializes S.  This is the default XLA path and what
+      the dry-run/roofline lowers.
+    - kernels/flash_prefill    : the TPU Pallas kernel (block-skip grid).
+* Decode — single-token attention against the KV cache
+  (``decode_attention_xla``; kernels/decode_attention on TPU), masked to the
+  live cache length and optionally to a sliding window.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def live_tile_pairs(n_q: int, n_kv: int, q_chunk: int, kv_chunk: int,
+                    causal: bool, window: Optional[int]) -> list:
+    """Statically enumerate (q-chunk, kv-chunk) tiles that contain any
+    unmasked position — the RPA 'mask never generates work' set."""
+    pairs = []
+    for i in range(n_q):
+        q_lo, q_hi = i * q_chunk, (i + 1) * q_chunk - 1
+        for j in range(n_kv):
+            k_lo, k_hi = j * kv_chunk, (j + 1) * kv_chunk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi < q_lo - window + 1:
+                continue
+            pairs.append((i, j))
+    return pairs
+
+
+def _mask_scores(s, q_start, k_start, causal, window):
+    """s: (..., qc, kc) f32 -> masked."""
+    qc, kc = s.shape[-2], s.shape[-1]
+    q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = jnp.ones((qc, kc), jnp.bool_)
+    if causal:
+        mask = jnp.logical_and(mask, k_ids <= q_ids)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_ids > q_ids - window)
+    return jnp.where(mask, s, NEG_INF), mask
+
+
+def _data_entangled(idx: jax.Array, ref: jax.Array) -> jax.Array:
+    """Add a data-derived zero so the tile indices are NOT trace-time
+    constants.  jax.checkpoint's partial evaluator hoists every computation
+    that depends only on constants out of the rematerialized region and
+    *stores* it — with constant tile indices that stacks all T tiles' masks
+    into a (T, ..., qc, kc) buffer (2.25 GiB/device at 72B-train scale,
+    measured).  Entangling makes the per-tile masks 'unknown', so they are
+    recomputed transiently per step instead."""
+    zero = jax.lax.convert_element_type(
+        jax.lax.slice(ref.reshape(-1), (0,), (1,)) * 0, jnp.int32)[0]
+    return idx + zero
+
+
+def _flash_fwd_scan(q, k, v, i_idx, j_idx, *, scale, q_chunk, kv_chunk,
+                    causal, window):
+    """Flat online-softmax scan over live tiles. q grouped (b,kv_h,g,s,d).
+    Returns (out f32, logsumexp f32)."""
+    i_idx = _data_entangled(i_idx, q)
+    j_idx = _data_entangled(j_idx, q)
+    b, kv_h, gsz, s, d = q.shape
+    acc0 = jnp.zeros((b, kv_h, gsz, s, d), jnp.float32)
+    m0 = jnp.full((b, kv_h, gsz, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, gsz, s, 1), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        # barrier: stops XLA from hoisting/batching every step's mask into a
+        # stacked (T, ..., qc, kc) pred buffer (2.25 GiB at 72B train scale)
+        i, j = jax.lax.optimization_barrier(ij)
+        q_start = i * q_chunk
+        k_start = j * kv_chunk
+        q_blk = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=3)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, k_start, kv_chunk, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, k_start, kv_chunk, axis=2)
+        sc = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, k_blk,
+                        preferred_element_type=jnp.float32) * scale
+        sc, mask = _mask_scores(sc, q_start, k_start, causal, window)
+        m_prev = jax.lax.dynamic_slice_in_dim(m, q_start, q_chunk, axis=3)
+        l_prev = jax.lax.dynamic_slice_in_dim(l, q_start, q_chunk, axis=3)
+        a_prev = jax.lax.dynamic_slice_in_dim(acc, q_start, q_chunk, axis=3)
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        a_new = a_prev * alpha + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, q_start, axis=3)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, q_start, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, q_start, axis=3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (i_idx, j_idx))
+    l_safe = jnp.maximum(l, 1e-30)
+    return acc / l_safe, m + jnp.log(l_safe)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: Optional[int], q_chunk: int,
+                kv_chunk: int, n_q: int, n_kv: int):
+    """custom_vjp flash attention for one static tile geometry.
+
+    Forward saves only (q, k, v, out, logsumexp) — O(s·d), never a score
+    matrix; backward recomputes each live tile (FlashAttention-2 recipe).
+    Without this, autodiff of the tile scan saves every (qc×kc) probability
+    block per step and an 80-layer 72B training step needs >150 GiB/device
+    (measured; see EXPERIMENTS.md §Perf) — this is what makes QAT training
+    of the assigned 70B+ archs fit HBM.
+    """
+    pairs = live_tile_pairs(n_q, n_kv, q_chunk, kv_chunk, causal, window)
+    i_host = tuple(p[0] for p in pairs)
+    j_host = tuple(p[1] for p in pairs)
+
+    @jax.custom_vjp
+    def flash(q, k, v, scale):
+        out, _ = _flash_fwd_scan(
+            q, k, v, jnp.asarray(i_host, jnp.int32),
+            jnp.asarray(j_host, jnp.int32), scale=scale, q_chunk=q_chunk,
+            kv_chunk=kv_chunk, causal=causal, window=window)
+        return out.astype(q.dtype)
+
+    def fwd(q, k, v, scale):
+        out, lse = _flash_fwd_scan(
+            q, k, v, jnp.asarray(i_host, jnp.int32),
+            jnp.asarray(j_host, jnp.int32), scale=scale, q_chunk=q_chunk,
+            kv_chunk=kv_chunk, causal=causal, window=window)
+        out = out.astype(q.dtype)
+        return out, (q, k, v, out, lse, scale)
+
+    def bwd(res, dout):
+        q, k, v, out, lse, scale = res
+        # D_i = rowsum(dout * out): the softmax-gradient correction term
+        dmat = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                       axis=-1, keepdims=True)
+        dq0 = jnp.zeros(q.shape, jnp.float32)
+        dk0 = jnp.zeros(k.shape, jnp.float32)
+        dv0 = jnp.zeros(v.shape, jnp.float32)
+
+        def body(carry, ij):
+            dq, dk, dv = carry
+            i, j = jax.lax.optimization_barrier(ij)
+            q_start = i * q_chunk
+            k_start = j * kv_chunk
+            q_blk = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=3)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, k_start, kv_chunk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, k_start, kv_chunk, axis=2)
+            do_blk = jax.lax.dynamic_slice_in_dim(dout, q_start, q_chunk,
+                                                  axis=3)
+            l_blk = jax.lax.dynamic_slice_in_dim(lse, q_start, q_chunk,
+                                                 axis=3)
+            d_blk = jax.lax.dynamic_slice_in_dim(dmat, q_start, q_chunk,
+                                                 axis=3)
+            sc = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+            _, mask = _mask_scores(sc, q_start, k_start, causal, window)
+            p = jnp.where(mask, jnp.exp(sc - l_blk), 0.0)
+            dv_j = jnp.einsum("bkgqc,bkgqd->bkcd", p.astype(do_blk.dtype),
+                              do_blk, preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_blk, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - d_blk) * scale
+            ds_c = ds.astype(q.dtype)
+            dq_i = jnp.einsum("bkgqc,bkcd->bkgqd", ds_c, k_blk,
+                              preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bkgqc,bkgqd->bkcd", ds_c, q_blk,
+                              preferred_element_type=jnp.float32)
+            dq = jax.lax.dynamic_update_slice_in_dim(
+                dq, jax.lax.dynamic_slice_in_dim(
+                    dq, q_start, q_chunk, axis=3) + dq_i, q_start, axis=3)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(
+                    dk, k_start, kv_chunk, axis=2) + dk_j, k_start, axis=2)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(
+                    dv, k_start, kv_chunk, axis=2) + dv_j, k_start, axis=2)
+            return (dq, dk, dv), None
+
+        (dq, dk, dv), _ = jax.lax.scan(
+            body, (dq0, dk0, dv0),
+            (_data_entangled(jnp.asarray(i_host, jnp.int32), q),
+             _data_entangled(jnp.asarray(j_host, jnp.int32), q)))
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                None)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def attention_xla_skip(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: Optional[int] = None,
+                       q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Causal-skip fused attention as one flat scan over live tiles.
+
+    q: (b, h, s, d); k, v: (b, kv_h, s, d) -> (b, h, s, d).
+    GQA is computed grouped (no KV head replication is materialized).
+    Differentiable in O(s·d) memory via the custom flash VJP.
+    """
+    b, h, s, d = q.shape
+    kv_h = k.shape[1]
+    gsz = h // kv_h
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    if s % q_chunk:   # odd sizes (tiny tests): fall back to a single chunk
+        q_chunk = s
+    if s % kv_chunk:
+        kv_chunk = s
+    n_q, n_kv = s // q_chunk, s // kv_chunk
+    scale = 1.0 / float(d) ** 0.5
+    flash = _make_flash(causal, window, q_chunk, kv_chunk, n_q, n_kv)
+    qg = q.reshape(b, kv_h, gsz, s, d)
+    out = flash(qg, k, v, scale)
+    return out.reshape(b, h, s, d)
+
+
+def attention_xla_naive(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Fig. 6b baseline: every tile computed, mask applied after (2× FLOPs)."""
+    b, h, s, d = q.shape
+    kv_h = k.shape[1]
+    gsz = h // kv_h
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    if s % q_chunk:
+        q_chunk = s
+    if s % kv_chunk:
+        kv_chunk = s
+    n_q, n_kv = s // q_chunk, s // kv_chunk
+    scale = 1.0 / float(d) ** 0.5
+    qg = q.reshape(b, kv_h, gsz, n_q, q_chunk, d)
+
+    def q_body(_, qi):
+        q_blk = qi["q"]  # (b, kv_h, gsz, qc, d)
+        q_start = qi["i"] * q_chunk
+
+        def kv_body(carry, kj):
+            acc, m, l = carry
+            k_start = kj["j"] * kv_chunk
+            sc = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, kj["k"],
+                            preferred_element_type=jnp.float32) * scale
+            sc, mask = _mask_scores(sc, q_start, k_start, causal, window)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+            p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(kj["v"].dtype), kj["v"],
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kv_h, gsz, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kv_h, gsz, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_h, gsz, q_chunk, 1), jnp.float32)
+        kc = k.reshape(b, kv_h, n_kv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+        vc = v.reshape(b, kv_h, n_kv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0),
+            {"j": jnp.arange(n_kv), "k": kc, "v": vc})
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    qs = {"i": jnp.arange(n_q), "q": qg.transpose(3, 0, 1, 2, 4, 5)}
+    _, outs = jax.lax.scan(q_body, None, qs)  # (n_q, b, kv_h, gsz, qc, d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, s, d)
+    return out.astype(q.dtype)
+
+
+def prefill_attention(q, k, v, *, causal=True, window=None, impl="xla",
+                      q_chunk=512, kv_chunk=512):
+    """Dispatch: xla (skip) | xla_naive | pallas."""
+    if impl == "pallas":
+        from repro.kernels.flash_prefill import ops as fp_ops
+        return fp_ops.flash_prefill(q, k, v, causal=causal, window=window)
+    if impl == "xla_naive":
+        return attention_xla_naive(q, k, v, causal=causal, window=window,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return attention_xla_skip(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: jax.Array, *,
+                         window: Optional[int] = None) -> jax.Array:
+    """Single-token attention vs cache. q: (b, h, 1, d); k/v: (b, kv_h, S, d).
+
+    Positions in [0, cache_len) are live; with a sliding window only the last
+    ``window`` of those are attended (the paper's DA unit masking).  The
+    sequence dim may be sharded — max/sum reductions become collectives under
+    SPMD (flash-decoding over the mesh).
+    """
+    b, h, _, d = q.shape
+    kv_h, S = k.shape[1], k.shape[2]
+    gsz = h // kv_h
+    scale = 1.0 / float(d) ** 0.5
+    qg = q.reshape(b, kv_h, gsz, d)
+    sc = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, None, None, :] < cache_len
+    if window is not None:
+        mask = jnp.logical_and(mask,
+                               pos[None, None, None, :] >= cache_len - window)
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(sc - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def decode_attention(q, k, v, cache_len, *, window=None, impl="xla"):
+    if impl == "pallas" and window is None:
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.decode_attention(q, k, v, cache_len)
+    return decode_attention_xla(q, k, v, cache_len, window=window)
+
+
+def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                    v_new: jax.Array, pos) -> Tuple[jax.Array, jax.Array]:
+    """Write new KV at position pos. Caches: (b, S, kv_h, hd); new: (b, t, kv_h, hd)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache

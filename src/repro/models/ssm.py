@@ -1,0 +1,174 @@
+"""Mamba2-style selective SSM block (chunked SSD scan) — for hymba's SSM heads.
+
+Training/prefill uses the chunkwise-parallel SSD form: within a chunk of
+length Q the recurrence is expanded into an attention-like (Q×Q) masked
+matrix; across chunks a small (heads, state, head_dim) recurrent state is
+carried by lax.scan.  Stability is structural: A = -exp(A_log) < 0 and
+Δ = softplus(·) ≥ 0, so every exponent exp(la_i − la_j), j ≤ i is ≤ 0.
+
+Decode is the O(1) recurrent step on (conv window, SSM state) — this is what
+makes hymba's ``long_500k`` cell runnable where full attention is not.
+
+All in/out projections are BitLinear (ternary) per the paper's technique; the
+SSM parameters themselves (A_log, D, conv, dt bias) stay dense — they are
+vectors, not weight matrices.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Ctx
+
+
+def ssm_init(key, d_model: int, n_heads: int, head_dim: int, state: int,
+             conv_w: int = 4, dtype=jnp.float32) -> dict:
+    d_inner = n_heads * head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers.linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "bc_proj": layers.linear_init(ks[1], d_model, 2 * state, dtype=dtype),
+        "dt_proj": layers.linear_init(ks[2], d_model, n_heads, dtype=dtype),
+        "out_proj": layers.linear_init(ks[3], d_inner, d_model, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[4], (conv_w, d_inner), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+    }
+
+
+def ssm_pack(p: dict, g: int) -> dict:
+    out = dict(p)
+    for name in ("in_proj", "bc_proj", "dt_proj", "out_proj"):
+        out[name] = layers.linear_pack(p[name], g)
+    return out
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x: (b, s, c); w: (cw, c). Returns (b, s, c)."""
+    cw = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(cw))
+    return out + b[None, None, :]
+
+
+def _gates(p, x, ctx: Ctx, n_heads, head_dim, state):
+    """Common projections. x: (b, s, d_model)."""
+    d_inner = n_heads * head_dim
+    xz = layers.linear_apply(p["in_proj"], x, ctx)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = layers.linear_apply(p["bc_proj"], x, ctx).astype(jnp.float32)
+    B, C = jnp.split(bc, 2, axis=-1)                       # (b, s, N)
+    dt = layers.linear_apply(p["dt_proj"], x, ctx).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])  # (b, s, H) >= 0
+    A = -jnp.exp(p["A_log"])                                # (H,) < 0
+    log_a = dt * A[None, None, :]                           # <= 0
+    return xin, z, B, C, dt, log_a
+
+
+def ssm_forward(p: dict, x: jax.Array, ctx: Ctx, *, n_heads: int,
+                head_dim: int, state: int, chunk: int = 128,
+                return_state: bool = False):
+    """Full-sequence chunked SSD. x: (b, s, d_model) -> (b, s, d_model).
+
+    With return_state=True also returns the post-sequence recurrent state
+    (used by prefill so decode can continue)."""
+    b, s, _ = x.shape
+    d_inner = n_heads * head_dim
+    chunk = min(chunk, s)
+    if s % chunk:     # odd sizes (tiny tests): single chunk
+        chunk = s
+    n_chunks = s // chunk
+
+    xin, z, B, C, dt, log_a = _gates(p, x, ctx, n_heads, head_dim, state)
+    xc = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    xh = xc.reshape(b, s, n_heads, head_dim)
+    # weight input by dt (ZOH-ish discretization: x_bar = dt * x)
+    xh = xh * dt[..., None]
+
+    def to_chunks(t, extra=()):
+        return t.reshape((b, n_chunks, chunk) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xs = {
+        "x": to_chunks(xh),       # (nc, b, Q, H, hd)
+        "B": to_chunks(B),        # (nc, b, Q, N)
+        "C": to_chunks(C),
+        "la": to_chunks(log_a),   # (nc, b, Q, H)
+    }
+    h0 = jnp.zeros((b, n_heads, state, head_dim), jnp.float32)
+
+    def body(h_prev, c):
+        xq, Bq, Cq, la = c["x"], c["B"], c["C"], c["la"]
+        cum = jnp.cumsum(la, axis=1)                       # (b, Q, H)
+        # intra-chunk: scores[i,j] = (C_i . B_j) exp(cum_i - cum_j), j <= i
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]     # (b, Q, Q, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        cb = jnp.einsum("bin,bjn->bij", Cq, Bq)            # (b, Q, Q)
+        scores = cb[..., None] * jnp.exp(dmat)             # (b, Q, Q, H)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", scores, xq)
+        # inter-chunk: y_i += C_i . h_prev * exp(cum_i)
+        y_inter = jnp.einsum("bin,bhnd,bih->bihd", Cq, h_prev, jnp.exp(cum))
+        # new state: h = exp(cum_Q) h_prev + sum_j exp(cum_Q - cum_j) B_j x_j
+        tail = cum[:, -1:, :]                              # (b, 1, H)
+        w = jnp.exp(tail - cum)                            # (b, Q, H)
+        h_new = (h_prev * jnp.exp(tail[:, 0, :])[:, :, None, None]
+                 + jnp.einsum("bjn,bjhd,bjh->bhnd", Bq, xq, w))
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(body, h0, xs)               # (nc, b, Q, H, hd)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, n_heads, head_dim)
+    y = y + p["D"][None, None, :, None] * xc.reshape(b, s, n_heads, head_dim)
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.linear_apply(p["out_proj"], y.astype(x.dtype), ctx)
+    if return_state:
+        cw = p["conv_w"].shape[0]
+        st = {"h": h_final, "conv": xin[:, s - (cw - 1):, :]}
+        return out, st
+    return out
+
+
+def ssm_init_state(b: int, n_heads: int, head_dim: int, state: int,
+                   conv_w: int, d_model_inner: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((b, n_heads, state, head_dim), jnp.float32),
+        "conv": jnp.zeros((b, conv_w - 1, d_model_inner), dtype),
+    }
+
+
+def ssm_step(p: dict, x: jax.Array, st: dict, ctx: Ctx, *, n_heads: int,
+             head_dim: int, state: int) -> Tuple[jax.Array, dict]:
+    """One decode step. x: (b, 1, d_model) -> (b, 1, d_model), new state."""
+    b = x.shape[0]
+    d_inner = n_heads * head_dim
+    xin, z, B, C, dt, log_a = _gates(p, x, ctx, n_heads, head_dim, state)
+    # conv over ring buffer
+    xcat = jnp.concatenate([st["conv"], xin], axis=1)      # (b, cw, d_inner)
+    cw = p["conv_w"].shape[0]
+    xc = jnp.sum(xcat * p["conv_w"][None, :, :], axis=1,
+                 keepdims=True) + p["conv_b"][None, None, :]
+    xc = jax.nn.silu(xc.astype(jnp.float32))               # (b, 1, d_inner)
+    xh = xc.reshape(b, n_heads, head_dim) * dt[:, 0, :, None]
+    a = jnp.exp(log_a[:, 0, :])                            # (b, H)
+    h_new = (st["h"] * a[:, :, None, None]
+             + jnp.einsum("bn,bhd->bhnd", B[:, 0], xh))
+    y = jnp.einsum("bn,bhnd->bhd", C[:, 0], h_new)
+    y = y + p["D"][None, :, None] * xc.reshape(b, n_heads, head_dim)
+    y = y.reshape(b, 1, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.linear_apply(p["out_proj"], y.astype(x.dtype), ctx)
+    new_st = {"h": h_new, "conv": xcat[:, 1:].astype(st["conv"].dtype)}
+    return out, new_st

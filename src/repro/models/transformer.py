@@ -1,0 +1,450 @@
+"""Decoder-only model assembly for every assigned architecture.
+
+One scanned block body per ``cfg.block_kind`` (attn | hymba | xlstm_pair);
+layer parameters are stacked along a leading L axis and the stack is consumed
+by ``jax.lax.scan`` — one compiled layer body regardless of depth, which keeps
+80-layer 72B dry-run compiles tractable and is the idiomatic JAX production
+pattern (MaxText does the same).
+
+Three entry points mirror the paper's phases:
+  * ``forward``      — full-sequence logits (training; QAT ternary path)
+  * ``prefill_step`` — full prompt -> last-token logits + filled KV cache
+  * ``decode_step``  — one token + cache -> next logits + updated cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, ssm, xlstm
+from repro.models.layers import Ctx
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": layers.linear_init(kq, cfg.d_model, cfg.q_dim,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "k": layers.linear_init(kk, cfg.d_model, cfg.kv_dim,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "v": layers.linear_init(kv, cfg.d_model, cfg.kv_dim,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "o": layers.linear_init(ko, cfg.q_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> dict:
+    if cfg.block_kind == "xlstm_pair":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "mlstm": xlstm.mlstm_init(k1, cfg.d_model, cfg.n_heads, cfg.hd,
+                                      dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "slstm": xlstm.slstm_init(k2, cfg.d_model, cfg.n_heads, cfg.hd,
+                                      dtype),
+        }
+    p = {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    ka, ks, km = jax.random.split(key, 3)
+    p["attn"] = _attn_init(ka, cfg, dtype)
+    if cfg.block_kind == "hymba":
+        p["ssm"] = ssm.ssm_init(ks, cfg.d_model, cfg.n_heads, cfg.hd,
+                                cfg.ssm_state, cfg.ssm_conv, dtype)
+    if cfg.n_experts:
+        p["moe"] = layers.moe_init(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                   dtype=dtype)
+    elif cfg.d_ff:
+        p["mlp"] = layers.mlp_init(km, cfg.d_model, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def n_scan_layers(cfg: ModelConfig) -> int:
+    if cfg.block_kind == "xlstm_pair":
+        assert cfg.n_layers % 2 == 0
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    n_scan = n_scan_layers(cfg)
+    layer_keys = jax.random.split(kl, n_scan)
+    per_layer = [_layer_init(k, cfg, dtype) for k in layer_keys]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)
+    params = {
+        "layers": stacked,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.frontend == "token":
+        params["embed"] = layers.embed_init(ke, cfg.vocab_size, cfg.d_model,
+                                            dtype)
+    if not cfg.tie_embeddings or cfg.frontend != "token":
+        params["lm_head"] = layers.linear_init(kh, cfg.d_model,
+                                               cfg.vocab_size, dtype=dtype)
+    return params
+
+
+def pack_params(cfg: ModelConfig, params: dict) -> dict:
+    """Offline stage: base-3 pack every ternary linear (vmapped over layers)."""
+    g = cfg.group_size
+
+    def pack_layer(p):
+        out = {"ln1": p["ln1"], "ln2": p["ln2"]}
+        if "mlstm" in p:
+            out["mlstm"] = xlstm.mlstm_pack(p["mlstm"], g)
+            out["slstm"] = xlstm.slstm_pack(p["slstm"], g)
+            return out
+        out["attn"] = {k: layers.linear_pack(v, g)
+                       for k, v in p["attn"].items()}
+        if "ssm" in p:
+            out["ssm"] = ssm.ssm_pack(p["ssm"], g)
+        if "moe" in p:
+            out["moe"] = layers.moe_pack(p["moe"], g)
+        if "mlp" in p:
+            out["mlp"] = layers.mlp_pack(p["mlp"], g)
+        return out
+
+    packed = {
+        "layers": jax.vmap(pack_layer)(params["layers"]),
+        "final_norm": params["final_norm"],
+    }
+    if "embed" in params:
+        packed["embed"] = params["embed"]
+    if "lm_head" in params:
+        packed["lm_head"] = dict(params["lm_head"])
+    return packed
+
+
+# ---------------------------------------------------------------------------
+# KV cache / recurrent state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, kv_quant: bool = False) -> dict:
+    n_scan = n_scan_layers(cfg)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape), tree)
+
+    if cfg.block_kind == "xlstm_pair":
+        return stack({
+            "mlstm": xlstm.mlstm_init_state(batch, cfg.n_heads, cfg.hd),
+            "slstm": xlstm.slstm_init_state(batch, cfg.n_heads, cfg.hd),
+        })
+    kv_dtype = jnp.int8 if kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((n_scan, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                       kv_dtype),
+        "v": jnp.zeros((n_scan, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                       kv_dtype),
+    }
+    if kv_quant:
+        # per (token, head) absmax scales — the paper's A8 recipe applied to
+        # the cache stream (beyond-paper optimization; §Perf cell C)
+        cache["k_scale"] = jnp.zeros(
+            (n_scan, batch, max_len, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros(
+            (n_scan, batch, max_len, cfg.n_kv_heads), jnp.float32)
+    if cfg.block_kind == "hymba":
+        cache["ssm"] = stack(ssm.ssm_init_state(
+            batch, cfg.n_heads, cfg.hd, cfg.ssm_state, cfg.ssm_conv,
+            cfg.n_heads * cfg.hd, dtype))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer (shared by attn and hymba blocks)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
+                cache: Optional[dict], positions: jax.Array,
+                phase: str, cache_len) -> Tuple[jax.Array, Optional[dict]]:
+    b, t, _ = x.shape
+    q = layers.linear_apply(p["q"], x, ctx).reshape(b, t, cfg.n_heads, cfg.hd)
+    k = layers.linear_apply(p["k"], x, ctx).reshape(b, t, cfg.n_kv_heads,
+                                                    cfg.hd)
+    v = layers.linear_apply(p["v"], x, ctx).reshape(b, t, cfg.n_kv_heads,
+                                                    cfg.hd)
+    angles = layers.rope_angles(positions, cfg.hd, cfg.rope_theta)
+    q = layers.apply_rope(q, angles, cfg.rope_style)
+    k = layers.apply_rope(k, angles, cfg.rope_style)
+
+    quantized = cache is not None and "k_scale" in cache
+
+    def q_kv(x):  # (b, t, kv_h, hd) -> int8 values + (b, t, kv_h) scale
+        amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                           1e-5)
+        scale = amax / 127.0
+        xq = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return xq, scale
+
+    new_cache = None
+    if phase == "full":
+        if cache is not None:  # prefill: persist KV
+            if quantized:
+                kq, ks = q_kv(k)
+                vq, vs = q_kv(v)
+                kc, vc = attention.update_kv_cache(cache["k"], cache["v"],
+                                                   kq, vq, 0)
+                new_cache = {
+                    "k": kc, "v": vc,
+                    "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k_scale"], ks, 0, axis=1),
+                    "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v_scale"], vs, 0, axis=1),
+                }
+            else:
+                kc, vc = attention.update_kv_cache(cache["k"], cache["v"],
+                                                   k, v, 0)
+                new_cache = {"k": kc, "v": vc}
+        o = attention.prefill_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=cfg.swa_window,
+            impl=ctx.attn_impl, q_chunk=ctx.attn_q_chunk,
+            kv_chunk=ctx.attn_kv_chunk)
+    else:  # decode step: t == 1
+        if quantized:
+            kq, ks = q_kv(k)
+            vq, vs = q_kv(v)
+            kc, vc = attention.update_kv_cache(cache["k"], cache["v"], kq,
+                                               vq, cache_len)
+            ks_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, cache_len, axis=1)
+            vs_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, cache_len, axis=1)
+            new_cache = {"k": kc, "v": vc, "k_scale": ks_c, "v_scale": vs_c}
+            kc_r, vc_r, ks_r, vs_r = jax.lax.optimization_barrier(
+                (kc, vc, ks_c, vs_c))
+            # dequantize at read (the Pallas decode kernel fuses this into
+            # the stream; the int8 HBM read is the bandwidth win)
+            k_read = (kc_r.astype(jnp.bfloat16)
+                      * ks_r[..., None].astype(jnp.bfloat16))
+            v_read = (vc_r.astype(jnp.bfloat16)
+                      * vs_r[..., None].astype(jnp.bfloat16))
+        else:
+            kc, vc = attention.update_kv_cache(cache["k"], cache["v"], k, v,
+                                               cache_len)
+            new_cache = {"k": kc, "v": vc}
+            # barrier: XLA:CPU lowers bf16 dots via f32 and would otherwise
+            # hoist the convert over the whole stacked cache (an extra
+            # cache-sized f32 buffer); TPU bf16 MXU never converts.
+            k_read, v_read = jax.lax.optimization_barrier((kc, vc))
+        o = attention.decode_attention(
+            q.transpose(0, 2, 1, 3), k_read.transpose(0, 2, 1, 3),
+            v_read.transpose(0, 2, 1, 3), cache_len + 1,
+            window=cfg.swa_window,
+            impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+    return layers.linear_apply(p["o"], o, ctx), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block bodies
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, ctx: Ctx, x: jax.Array, p: dict,
+                 cache: Optional[dict], positions: jax.Array, phase: str,
+                 cache_len) -> Tuple[jax.Array, Optional[dict]]:
+    new_cache = {}
+    if cfg.block_kind == "xlstm_pair":
+        want_state = cache is not None
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if phase == "full":
+            out = xlstm.mlstm_forward(p["mlstm"], h, ctx,
+                                      n_heads=cfg.n_heads, head_dim=cfg.hd,
+                                      chunk=cfg.ssm_chunk or 128,
+                                      return_state=want_state)
+            if want_state:
+                out, new_cache["mlstm"] = out
+            x = x + out
+        else:
+            o, new_cache["mlstm"] = xlstm.mlstm_step(
+                p["mlstm"], h, cache["mlstm"], ctx, n_heads=cfg.n_heads,
+                head_dim=cfg.hd)
+            x = x + o
+        h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if phase == "full":
+            out = xlstm.slstm_forward(p["slstm"], h, ctx,
+                                      n_heads=cfg.n_heads, head_dim=cfg.hd,
+                                      return_state=want_state)
+            if want_state:
+                out, new_cache["slstm"] = out
+            x = x + out
+        else:
+            o, new_cache["slstm"] = xlstm.slstm_step(
+                p["slstm"], h, cache["slstm"], ctx, n_heads=cfg.n_heads,
+                head_dim=cfg.hd)
+            x = x + o
+        return x, (new_cache if new_cache else None)
+
+    # attn | hymba
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_cache = None
+    if cache is not None:
+        attn_cache = {k_: cache[k_] for k_ in
+                      ("k", "v", "k_scale", "v_scale") if k_ in cache}
+    attn_out, kv_cache = _attn_apply(cfg, ctx, p["attn"], h, attn_cache,
+                                     positions, phase, cache_len)
+    if kv_cache is not None:
+        new_cache.update(kv_cache)
+    if cfg.block_kind == "hymba":
+        # parallel attention + SSM heads, outputs averaged (Hymba fusion)
+        if phase == "full":
+            out = ssm.ssm_forward(p["ssm"], h, ctx, n_heads=cfg.n_heads,
+                                  head_dim=cfg.hd, state=cfg.ssm_state,
+                                  chunk=cfg.ssm_chunk,
+                                  return_state=cache is not None)
+            if cache is not None:
+                ssm_out, new_cache["ssm"] = out
+            else:
+                ssm_out = out
+        else:
+            ssm_out, new_ssm = ssm.ssm_step(p["ssm"], h, cache["ssm"], ctx,
+                                            n_heads=cfg.n_heads,
+                                            head_dim=cfg.hd,
+                                            state=cfg.ssm_state)
+            new_cache["ssm"] = new_ssm
+        attn_out = 0.5 * (attn_out + ssm_out.astype(attn_out.dtype))
+    x = x + attn_out
+    h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        b, t, d = h.shape
+        out = layers.moe_apply(p["moe"], h.reshape(b * t, d),
+                               top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor, ctx=ctx)
+        x = x + out.reshape(b, t, d)
+    elif cfg.d_ff:
+        x = x + layers.mlp_apply(p["mlp"], h, ctx)
+    return x, (new_cache if new_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg: ModelConfig, params: dict, inputs: jax.Array,
+              ctx: Ctx) -> jax.Array:
+    if cfg.frontend == "token":
+        x = layers.embed_apply(params["embed"], inputs)
+    else:  # audio/vlm stub: inputs are precomputed frame/patch embeddings
+        x = inputs
+    return x.astype(ctx.dtype)
+
+
+def _lm_head(cfg: ModelConfig, params: dict, x: jax.Array,
+             ctx: Ctx) -> jax.Array:
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings and "embed" in params:
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embed"]["tok"].astype(x.dtype))
+    else:
+        logits = layers.linear_apply(params["lm_head"], x, ctx,
+                                     ternary_w=cfg.ternary_head)
+    return ctx.c(logits, "logits")
+
+
+def _run_layers(cfg: ModelConfig, ctx: Ctx, params: dict, x: jax.Array,
+                cache: Optional[dict], positions: jax.Array, phase: str,
+                cache_len, remat: bool = True):
+    def body(carry, xs):
+        layer_p, layer_cache = xs
+        carry = ctx.c(carry, "residual")  # SP/TP layout between blocks
+        y, new_cache = _block_apply(cfg, ctx, carry, layer_p, layer_cache,
+                                    positions, phase, cache_len)
+        return y, new_cache
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if ctx.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, new_cache
+
+
+def forward_features(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                     ctx: Ctx, remat: bool = True) -> jax.Array:
+    """Backbone only: final hidden states (b, s, d_model)."""
+    x = _embed_in(cfg, params, inputs, ctx)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _ = _run_layers(cfg, ctx, params, x, None, positions, "full", None,
+                       remat)
+    return x
+
+
+def forward(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
+            remat: bool = True) -> jax.Array:
+    """Training/eval forward: all-position logits (b, s, vocab)."""
+    x = forward_features(cfg, params, inputs, ctx, remat)
+    return _lm_head(cfg, params, x, ctx)
+
+
+def lm_head_loss_chunked(cfg: ModelConfig, params: dict, x: jax.Array,
+                         labels: jax.Array, ctx: Ctx,
+                         chunk: int = 512) -> jax.Array:
+    """Fused unembedding + cross-entropy, scanned over sequence chunks.
+
+    Never materializes the (b, s, vocab) logits tensor: with 150k-vocab
+    archs at per-device batch 4 × seq 4096 the f32 logits chain alone is
+    several GiB/device (measured in §Perf) — chunking bounds it to
+    (b, chunk, vocab) and jax.checkpoint recomputes per chunk on backward.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+    # pin the layout before chunking: without this, SPMD can leave x sharded
+    # on d_model and then fails to partition the scan's chunk slicing
+    x = ctx.c(x, "residual")
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs_):
+        xcur, lcur = xs_
+        logits = _lm_head(cfg, params, xcur, ctx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lcur[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def prefill_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
+                 cache: dict, remat: bool = False):
+    """Prompt -> (last-token logits (b, vocab), filled cache)."""
+    x = _embed_in(cfg, params, inputs, ctx)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "full",
+                               None, remat)
+    logits = _lm_head(cfg, params, x[:, -1:], ctx)
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
+                cache: dict, cache_len: jax.Array):
+    """One token (b, 1) + cache + live length -> (logits (b, vocab), cache)."""
+    x = _embed_in(cfg, params, inputs, ctx)
+    positions = cache_len + jnp.arange(1)
+    x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "step",
+                               cache_len, remat=False)
+    logits = _lm_head(cfg, params, x, ctx)
+    return logits[:, 0], new_cache

@@ -1,0 +1,236 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+mLSTM is linear-attention-like: C_t = f_t C_{t-1} + i_t v_t k_tᵀ,
+n_t = f_t n_{t-1} + i_t k_t, h_t = (C_t q_t) / max(|n_tᵀ q_t|, exp(-m_t)).
+We implement the chunkwise form with the standard log-space stabilizer: the
+forget gate is sigmoid (log f ≤ 0, decays), the input gate is exp and every
+row of the decay matrix is stabilized by its running max m (which also scales
+the denominator floor), following the xLSTM paper's numerics.
+
+sLSTM has per-head recurrent connections and is inherently sequential — a
+lax.scan over time (the xLSTM paper accepts this; on TPU it is a while loop).
+
+All projections are BitLinear (ternary).  d_ff = 0 in the xlstm-350m config:
+these blocks carry their own up/down projections, there is no separate FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Ctx
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, head_dim: int,
+               dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d_inner = n_heads * head_dim
+    return {
+        "qkv": layers.linear_init(ks[0], d_model, 3 * d_inner, dtype=dtype),
+        "gates": layers.linear_init(ks[1], d_model, 2 * n_heads, dtype=dtype),
+        "ogate": layers.linear_init(ks[2], d_model, d_inner, dtype=dtype),
+        "out": layers.linear_init(ks[3], d_inner, d_model, dtype=dtype),
+    }
+
+
+def mlstm_pack(p: dict, g: int) -> dict:
+    return {k: layers.linear_pack(v, g) for k, v in p.items()}
+
+
+def _mlstm_proj(p, x, ctx, n_heads, head_dim):
+    b, s, _ = x.shape
+    qkv = layers.linear_apply(p["qkv"], x, ctx)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (b, s, n_heads, head_dim)
+    gates = layers.linear_apply(p["gates"], x, ctx).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)            # (b, s, H) each
+    log_f = jax.nn.log_sigmoid(fg)                   # <= 0
+    o = jax.nn.sigmoid(layers.linear_apply(p["ogate"], x, ctx)
+                       .astype(jnp.float32))
+    scale = 1.0 / float(head_dim) ** 0.5
+    return (q.reshape(shape).astype(jnp.float32) * scale,
+            k.reshape(shape).astype(jnp.float32),
+            v.reshape(shape).astype(jnp.float32), ig, log_f, o)
+
+
+def mlstm_forward(p: dict, x: jax.Array, ctx: Ctx, *, n_heads: int,
+                  head_dim: int, chunk: int = 128,
+                  return_state: bool = False):
+    """Chunkwise-parallel mLSTM. x: (b, s, d) -> (b, s, d)."""
+    b, s, _ = x.shape
+    d_inner = n_heads * head_dim
+    chunk = min(chunk, s)
+    if s % chunk:     # odd sizes (tiny tests): single chunk
+        chunk = s
+    n_chunks = s // chunk
+    q, k, v, ig, log_f, o = _mlstm_proj(p, x, ctx, n_heads, head_dim)
+
+    def to_chunks(t):
+        t = t.reshape((b, n_chunks, chunk) + t.shape[2:])
+        return jnp.moveaxis(t, 1, 0)
+
+    xs = {"q": to_chunks(q), "k": to_chunks(k), "v": to_chunks(v),
+          "i": to_chunks(ig), "lf": to_chunks(log_f)}
+    C0 = jnp.zeros((b, n_heads, head_dim, head_dim), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, head_dim), jnp.float32)
+    m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+
+    def body(carry, c):
+        C_prev, n_prev, m_prev = carry
+        qq, kk, vv, ii, lf = c["q"], c["k"], c["v"], c["i"], c["lf"]
+        cum = jnp.cumsum(lf, axis=1)                    # (b, Q, H) <= 0
+        # log weight of source j seen from target i: ii_j + cum_i - cum_j
+        dmat = cum[:, :, None, :] - cum[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        # candidates from the carried state: m_prev + cum_i
+        inter_log = m_prev[:, None, :] + cum             # (b, Q, H)
+        m_row = jnp.maximum(jnp.max(dmat, axis=2), inter_log)  # (b, Q, H)
+        m_row = jnp.maximum(m_row, -1e30)
+        w_intra = jnp.exp(dmat - m_row[:, :, None, :])   # (b, Q, Q, H)
+        w_inter = jnp.exp(inter_log - m_row)             # (b, Q, H)
+
+        qk = jnp.einsum("bihd,bjhd->bijh", qq, kk)       # (b, Q, Q, H)
+        num = jnp.einsum("bijh,bijh,bjhd->bihd", qk, w_intra, vv)
+        den = jnp.einsum("bijh,bijh->bih", qk, w_intra)
+        num = num + jnp.einsum("bihd,bhde,bih->bihe", qq, C_prev, w_inter)
+        den = den + jnp.einsum("bihd,bhd,bih->bih", qq, n_prev, w_inter)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+
+        # carry update (stabilized at the chunk's final max)
+        tail = cum[:, -1:, :]
+        m_new = jnp.maximum(m_prev + tail[:, 0], jnp.max(
+            ii + tail - cum, axis=1))
+        w_c = jnp.exp(ii + tail - cum - m_new[:, None, :])   # (b, Q, H)
+        decay_c = jnp.exp(m_prev + tail[:, 0] - m_new)       # (b, H)
+        C_new = (C_prev * decay_c[..., None, None]
+                 + jnp.einsum("bjhd,bjhe,bjh->bhde", kk, vv, w_c))
+        n_new = (n_prev * decay_c[..., None]
+                 + jnp.einsum("bjhd,bjh->bhd", kk, w_c))
+        return (C_new, n_new, m_new), h
+
+    (C_f, n_f, m_f), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, n_heads, head_dim)
+    h = h.reshape(b, s, d_inner) * o
+    out = layers.linear_apply(p["out"], h.astype(x.dtype), ctx)
+    if return_state:
+        return out, {"C": C_f, "n": n_f, "m": m_f}
+    return out
+
+
+def mlstm_init_state(b, n_heads, head_dim):
+    return {
+        "C": jnp.zeros((b, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((b, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((b, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(p: dict, x: jax.Array, st: dict, ctx: Ctx, *, n_heads: int,
+               head_dim: int) -> Tuple[jax.Array, dict]:
+    """One decode step. x: (b, 1, d) -> (b, 1, d)."""
+    b = x.shape[0]
+    d_inner = n_heads * head_dim
+    q, k, v, ig, log_f, o = _mlstm_proj(p, x, ctx, n_heads, head_dim)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (b, H, hd)
+    ii, lf = ig[:, 0], log_f[:, 0]                       # (b, H)
+    m_new = jnp.maximum(st["m"] + lf, ii)
+    f_w = jnp.exp(st["m"] + lf - m_new)
+    i_w = jnp.exp(ii - m_new)
+    C_new = (st["C"] * f_w[..., None, None]
+             + jnp.einsum("bhd,bhe,bh->bhde", k, v, i_w))
+    n_new = st["n"] * f_w[..., None] + k * i_w[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, 1, d_inner) * o
+    out = layers.linear_apply(p["out"], h.astype(x.dtype), ctx)
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int, head_dim: int,
+               dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    d_inner = n_heads * head_dim
+    return {
+        "wx": layers.linear_init(ks[0], d_model, 4 * d_inner, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (4, n_heads, head_dim, head_dim),
+                                jnp.float32) * 0.05).astype(dtype),
+        "out": layers.linear_init(ks[2], d_inner, d_model, dtype=dtype),
+    }
+
+
+def slstm_pack(p: dict, g: int) -> dict:
+    return {"wx": layers.linear_pack(p["wx"], g), "r": p["r"],
+            "out": layers.linear_pack(p["out"], g)}
+
+
+def slstm_init_state(b, n_heads, head_dim):
+    z = jnp.zeros((b, n_heads, head_dim), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((b, n_heads, head_dim), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, wx_t, st):
+    """wx_t: (b, 4*d_inner) pre-projected input; st: state dict."""
+    b = wx_t.shape[0]
+    H, hd = st["h"].shape[1], st["h"].shape[2]
+    rz = jnp.einsum("bhd,ghde->gbhe", st["h"], p["r"].astype(jnp.float32))
+    zx, ix, fx, ox = jnp.split(
+        wx_t.astype(jnp.float32).reshape(b, 4, H, hd), 4, axis=1)
+    z_in = zx[:, 0] + rz[0]
+    i_in = ix[:, 0] + rz[1]
+    f_in = fx[:, 0] + rz[2]
+    o_in = ox[:, 0] + rz[3]
+    z = jnp.tanh(z_in)
+    log_f = jax.nn.log_sigmoid(f_in)
+    m_new = jnp.maximum(log_f + st["m"], i_in)
+    i_w = jnp.exp(i_in - m_new)
+    f_w = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_w * st["c"] + i_w * z
+    n_new = jnp.maximum(f_w * st["n"] + i_w, jnp.exp(-m_new))
+    h_new = jax.nn.sigmoid(o_in) * c_new / n_new
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(p: dict, x: jax.Array, ctx: Ctx, *, n_heads: int,
+                  head_dim: int, return_state: bool = False):
+    """Sequential sLSTM. x: (b, s, d) -> (b, s, d)."""
+    b, s, _ = x.shape
+    d_inner = n_heads * head_dim
+    wx = layers.linear_apply(p["wx"], x, ctx)            # (b, s, 4*d_inner)
+
+    def body(st, wx_t):
+        st = _slstm_cell(p, wx_t, st)
+        return st, st["h"]
+
+    st0 = slstm_init_state(b, n_heads, head_dim)
+    st_f, hs = jax.lax.scan(body, st0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_inner)
+    out = layers.linear_apply(p["out"], h.astype(x.dtype), ctx)
+    if return_state:
+        return out, st_f
+    return out
+
+
+def slstm_step(p: dict, x: jax.Array, st: dict, ctx: Ctx, *, n_heads: int,
+               head_dim: int) -> Tuple[jax.Array, dict]:
+    b = x.shape[0]
+    d_inner = n_heads * head_dim
+    wx = layers.linear_apply(p["wx"], x, ctx)[:, 0]      # (b, 4*d_inner)
+    st_new = _slstm_cell(p, wx, st)
+    out = layers.linear_apply(
+        p["out"], st_new["h"].reshape(b, 1, d_inner).astype(x.dtype), ctx)
+    return out, st_new

@@ -1,0 +1,1 @@
+from repro.optim.adamw import adamw  # noqa: F401

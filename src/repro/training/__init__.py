@@ -1,0 +1,2 @@
+from repro.training.steps import (  # noqa: F401
+    make_decode_fn, make_prefill_fn, make_train_step, softmax_xent)

@@ -1,0 +1,210 @@
+"""Per-kernel allclose tests vs pure-jnp oracles (interpret=True on CPU).
+
+Every Pallas kernel is swept over shapes/dtypes and asserted against its
+ref.py oracle, per the deliverable spec.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ternary
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.flash_prefill import ops as fp_ops
+from repro.kernels.flash_prefill import ref as fp_ref
+from repro.kernels.rmsnorm_quant import ops as rq_ops
+from repro.kernels.rmsnorm_quant import ref as rq_ref
+from repro.kernels.swiglu_quant import ops as sq_ops
+from repro.kernels.swiglu_quant import ref as sq_ref
+from repro.kernels.tlmm import ops as tlmm_ops
+from repro.kernels.tlmm import ref as tlmm_ref
+from repro.kernels.tlmm_lut import ops as lut_ops
+
+
+def _mk_ternary(rng, n, k):
+    return rng.integers(-1, 2, size=(n, k)).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# TLMM (decode-to-MXU) and TLMM-LUT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k,g", [
+    (8, 160, 128, 5),      # aligned
+    (8, 165, 128, 5),      # n not multiple of block
+    (3, 64, 48, 4),        # tiny, odd everything
+    (16, 320, 256, 5),     # multi-block reduction
+    (1, 640, 128, 5),      # decode shape (single token)
+    (8, 96, 64, 3),        # paper G=3
+])
+def test_tlmm_matches_ref(m, n, k, g):
+    rng = np.random.default_rng(n * k + g)
+    a = rng.integers(-127, 128, size=(m, n)).astype(np.int8)
+    wt = _mk_ternary(rng, n, k)
+    codes = ternary.pack_ternary(jnp.asarray(wt), g)
+    ref = tlmm_ref.tlmm_ref(jnp.asarray(a), codes, g, n)
+    out = tlmm_ops.tlmm(jnp.asarray(a), codes, g=g, n=n,
+                        bm=8, bn=min(((n + g - 1) // g) * g, 320), bk=64,
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("m,n,k,g", [
+    (4, 48, 32, 3),
+    (2, 45, 17, 3),
+    (8, 50, 64, 5),
+    (1, 96, 24, 2),
+])
+def test_tlmm_lut_matches_ref(m, n, k, g):
+    rng = np.random.default_rng(m + n + k)
+    a = rng.integers(-127, 128, size=(m, n)).astype(np.int8)
+    wt = _mk_ternary(rng, n, k)
+    codes = ternary.pack_ternary(jnp.asarray(wt), g)
+    ref = tlmm_ref.tlmm_ref(jnp.asarray(a), codes, g, n)
+    out = lut_ops.tlmm_lut(jnp.asarray(a), codes, g=g, bm=2, bn=6 * g, bk=8,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_tlmm_large_block_sweep():
+    """Block-shape sweep: same inputs, every tiling gives identical results."""
+    rng = np.random.default_rng(0)
+    m, n, k, g = 16, 640, 256, 5
+    a = rng.integers(-127, 128, size=(m, n)).astype(np.int8)
+    wt = _mk_ternary(rng, n, k)
+    codes = ternary.pack_ternary(jnp.asarray(wt), g)
+    ref = np.asarray(tlmm_ref.tlmm_ref(jnp.asarray(a), codes, g, n))
+    for bm, bn, bk in [(8, 320, 64), (16, 640, 128), (8, 640, 256),
+                      (16, 320, 128)]:
+        out = tlmm_ops.tlmm(jnp.asarray(a), codes, g=g, n=n, bm=bm, bn=bn,
+                            bk=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+# ---------------------------------------------------------------------------
+# RMS-MAX unit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d", [(8, 128), (5, 96), (16, 1024), (1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_quant_matches_ref(m, d, dtype):
+    key = jax.random.PRNGKey(m * d)
+    x = (jax.random.normal(key, (m, d)) * 3).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,)).astype(dtype)
+    q_ref, s_ref = rq_ref.rmsnorm_quant_ref(x, w)
+    q, s = rq_ops.rmsnorm_quant(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    # int8 rounding boundaries can flip by 1 ulp between fused orders
+    assert np.max(np.abs(np.asarray(q, np.int32) -
+                         np.asarray(q_ref, np.int32))) <= 1
+
+
+def test_rmsnorm_quant_3d_input():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 7, 64))
+    w = jnp.ones((64,))
+    q, s = rq_ops.rmsnorm_quant(x, w, interpret=True)
+    assert q.shape == (2, 7, 64) and s.shape == (2, 7, 1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU fuse unit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,f", [(8, 256), (3, 128), (16, 512)])
+def test_swiglu_quant_matches_ref(m, f):
+    rng = np.random.default_rng(m + f)
+    gate = jnp.asarray(rng.integers(-2000, 2000, size=(m, f)), jnp.int32)
+    up = jnp.asarray(rng.integers(-2000, 2000, size=(m, f)), jnp.int32)
+    gs = jnp.asarray(rng.uniform(1e-4, 1e-2, size=(m, 1)), jnp.float32)
+    us = jnp.asarray(rng.uniform(1e-4, 1e-2, size=(m, 1)), jnp.float32)
+    q_ref, s_ref = sq_ref.swiglu_quant_ref(gate, up, gs, us)
+    q, s = sq_ops.swiglu_quant(gate, up, gs, us, interpret=True)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    assert np.max(np.abs(np.asarray(q, np.int32) -
+                         np.asarray(q_ref, np.int32))) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill attention (RPA unit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv_h,s,d", [
+    (1, 4, 4, 128, 64),    # MHA
+    (1, 4, 2, 128, 64),    # GQA 2:1
+    (2, 8, 2, 64, 32),     # GQA 4:1, multi-batch
+    (1, 2, 1, 96, 64),     # s not a multiple of the block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_matches_ref(b, h, kv_h, s, d, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d)).astype(dtype)
+    k = jax.random.normal(keys[1], (b, kv_h, s, d)).astype(dtype)
+    v = jax.random.normal(keys[2], (b, kv_h, s, d)).astype(dtype)
+    ref = fp_ref.attention_ref(q, k, v, causal=True)
+    out = fp_ops.flash_prefill(q, k, v, causal=True, bq=32, bkv=32,
+                               interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_prefill_sliding_window():
+    b, h, s, d = 1, 2, 128, 32
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d))
+    k = jax.random.normal(keys[1], (b, h, s, d))
+    v = jax.random.normal(keys[2], (b, h, s, d))
+    for window in (16, 64):
+        ref = fp_ref.attention_ref(q, k, v, causal=True, window=window)
+        out = fp_ops.flash_prefill(q, k, v, causal=True, window=window,
+                                   bq=32, bkv=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_prefill_no_nan_long():
+    """Numerical robustness at larger scale (online softmax stability)."""
+    q = jnp.ones((1, 1, 256, 16)) * 10.0
+    k = jnp.ones((1, 1, 256, 16)) * 10.0
+    v = jnp.ones((1, 1, 256, 16))
+    out = fp_ops.flash_prefill(q, k, v, bq=64, bkv=64, interpret=True)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (DA unit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv_h,s,d,cache_len", [
+    (1, 4, 4, 256, 64, 256),   # full cache
+    (1, 4, 2, 256, 64, 100),   # partial cache (masked tail)
+    (2, 8, 2, 128, 32, 77),    # GQA + ragged length
+    (1, 2, 1, 64, 128, 1),     # cache of one token
+])
+def test_decode_attention_matches_ref(b, h, kv_h, s, d, cache_len):
+    keys = jax.random.split(jax.random.PRNGKey(s + cache_len), 3)
+    q = jax.random.normal(keys[0], (b, h, 1, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+    clen = jnp.asarray(cache_len, jnp.int32)
+    ref = da_ref.decode_attention_ref(q, k, v, clen)
+    out = da_ops.decode_attention(q, k, v, clen, bkv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("n_splits", [2, 4, 8])
+def test_decode_attention_splitk_matches_ref(n_splits):
+    b, h, kv_h, s, d = 1, 4, 2, 256, 64
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(keys[0], (b, h, 1, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+    clen = jnp.asarray(173, jnp.int32)
+    ref = da_ref.decode_attention_ref(q, k, v, clen)
+    out = da_ops.decode_attention_splitk(q, k, v, clen, n_splits=n_splits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,242 @@
+"""Model component tests: attention paths, RoPE equivalence, SSM/xLSTM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, layers, ssm, xlstm
+from repro.models.layers import Ctx
+from repro.kernels.flash_prefill import ref as fp_ref
+
+CTX = Ctx(mode="dense")
+
+
+# ---------------------------------------------------------------------------
+# XLA attention formulations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv_h,s,d,window", [
+    (1, 4, 2, 128, 32, None),
+    (2, 4, 4, 64, 16, None),
+    (1, 8, 2, 128, 32, 48),     # sliding window
+])
+def test_attention_xla_skip_matches_ref(b, h, kv_h, s, d, window):
+    keys = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+    ref = fp_ref.attention_ref(q, k, v, causal=True, window=window)
+    out = attention.attention_xla_skip(q, k, v, causal=True, window=window,
+                                       q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    naive = attention.attention_xla_naive(q, k, v, causal=True, window=window,
+                                          q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_live_tile_pairs_halves_causal_work():
+    pairs = attention.live_tile_pairs(8, 8, 64, 64, causal=True, window=None)
+    assert len(pairs) == 8 * 9 // 2          # triangular
+    pairs_w = attention.live_tile_pairs(8, 8, 64, 64, causal=True, window=64)
+    assert len(pairs_w) == 8 + 7             # banded: diagonal + one off-band
+
+
+def test_decode_attention_xla_matches_ref():
+    from repro.kernels.decode_attention import ref as da_ref
+    b, h, kv_h, s, d = 2, 8, 2, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, h, 1, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+    clen = jnp.asarray(37, jnp.int32)
+    ref = da_ref.decode_attention_ref(q, k, v, clen)
+    out = attention.decode_attention_xla(q, k, v, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoPE: the paper's eq. 4 / eq. 5 / eq. 6 relationship
+# ---------------------------------------------------------------------------
+
+def test_rope_styles_equivalent_after_eq6_permutation():
+    """Consecutive RoPE on permuted channels == interleaved RoPE, permuted.
+
+    This is the paper's lossless weight transformation (eq. 6): permuting the
+    projection weights offline lets the hardware use the streaming-friendly
+    consecutive form while computing the same attention scores.
+    """
+    hd, s = 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, s, 1, hd))
+    angles = layers.rope_angles(jnp.arange(s), hd, 10000.0)
+    perm = layers.rope_weight_permutation(hd)       # out-side gather (eq. 6)
+    inv = jnp.argsort(perm)                         # in-side gather (weights)
+    inter = layers.apply_rope(x, angles, "interleaved")
+    cons = layers.apply_rope(x[..., inv], angles, "consecutive")
+    # Permuting the projection weights offline (x[..., inv] == W' x) and
+    # reading the consecutive-RoPE output back through perm reproduces the
+    # interleaved computation exactly: the attention scores are unchanged.
+    np.testing.assert_allclose(np.asarray(inter),
+                               np.asarray(cons[..., perm]), atol=1e-5)
+    # ... and because both rotations are orthogonal per pair, q.k dot products
+    # computed fully in either convention agree without any output fixup:
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, s, 1, hd))
+    qi = layers.apply_rope(q, angles, "interleaved")
+    qc = layers.apply_rope(q[..., inv], angles, "consecutive")
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("bshd,bthd->bsht", qi, inter)),
+        np.asarray(jnp.einsum("bshd,bthd->bsht", qc, cons)), atol=1e-4)
+
+
+def test_rope_dot_product_invariance():
+    """RoPE preserves relative-position structure: q_m . k_n depends on m-n."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+    for style in ("consecutive", "interleaved"):
+        def dot(m, n):
+            am = layers.rope_angles(jnp.asarray([m]), hd, 10000.0)
+            an = layers.rope_angles(jnp.asarray([n]), hd, 10000.0)
+            qm = layers.apply_rope(q, am, style)
+            kn = layers.apply_rope(k, an, style)
+            return float(jnp.sum(qm * kn))
+        assert dot(3, 1) == pytest.approx(dot(7, 5), abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSM: chunked-parallel == sequential step
+# ---------------------------------------------------------------------------
+
+def test_ssm_forward_matches_stepwise():
+    b, s, d, H, hd, N = 2, 32, 16, 2, 8, 4
+    p = ssm.ssm_init(jax.random.PRNGKey(0), d, H, hd, N)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    y_par, st_par = ssm.ssm_forward(p, x, CTX, n_heads=H, head_dim=hd,
+                                    state=N, chunk=8, return_state=True)
+    st = ssm.ssm_init_state(b, H, hd, N, p["conv_w"].shape[0], H * hd)
+    ys = []
+    for t in range(s):
+        y_t, st = ssm.ssm_step(p, x[:, t:t + 1], st, CTX, n_heads=H,
+                               head_dim=hd, state=N)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par["h"]), np.asarray(st["h"]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par["conv"]),
+                               np.asarray(st["conv"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: chunkwise mLSTM == sequential step; sLSTM stability
+# ---------------------------------------------------------------------------
+
+def test_mlstm_forward_matches_stepwise():
+    b, s, d, H, hd = 2, 32, 16, 2, 8
+    p = xlstm.mlstm_init(jax.random.PRNGKey(0), d, H, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    y_par, st_par = xlstm.mlstm_forward(p, x, CTX, n_heads=H, head_dim=hd,
+                                        chunk=8, return_state=True)
+    st = xlstm.mlstm_init_state(b, H, hd)
+    ys = []
+    for t in range(s):
+        y_t, st = xlstm.mlstm_step(p, x[:, t:t + 1], st, CTX, n_heads=H,
+                                   head_dim=hd)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_par["C"]), np.asarray(st["C"]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_slstm_forward_matches_stepwise_and_stable():
+    b, s, d, H, hd = 1, 16, 8, 2, 4
+    p = xlstm.slstm_init(jax.random.PRNGKey(0), d, H, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 5.0  # stress
+    y_par, st_par = xlstm.slstm_forward(p, x, CTX, n_heads=H, head_dim=hd,
+                                        return_state=True)
+    assert not bool(jnp.any(jnp.isnan(y_par)))
+    st = xlstm.slstm_init_state(b, H, hd)
+    ys = []
+    for t in range(s):
+        y_t, st = xlstm.slstm_step(p, x[:, t:t + 1], st, CTX, n_heads=H,
+                                   head_dim=hd)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_routes_and_preserves_shape():
+    d, f, E = 16, 32, 4
+    p = layers.moe_init(jax.random.PRNGKey(0), d, f, E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, d))
+    out = layers.moe_apply(p, x, top_k=2, capacity_factor=2.0, ctx=CTX)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out)))
+    # packed path agrees approximately with dense-ternary QAT path
+    ctx_q = Ctx(mode="qat")
+    out_q = layers.moe_apply(p, x, top_k=2, capacity_factor=2.0, ctx=ctx_q)
+    packed = layers.moe_pack(p, 5)
+    ctx_p = Ctx(mode="packed", group_size=5)
+    out_p = layers.moe_apply(packed, x, top_k=2, capacity_factor=2.0,
+                             ctx=ctx_p)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_p),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_flash_vjp_matches_reference_gradients():
+    """Custom FA2 backward == autodiff of the dense reference."""
+    b, h, kv_h, s, d = 1, 4, 2, 64, 16
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+
+    def loss_flash(q, k, v):
+        o = attention.attention_xla_skip(q, k, v, causal=True,
+                                         q_chunk=16, kv_chunk=16)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_ref(q, k, v):
+        o = fp_ref.attention_ref(q, k, v, causal=True)
+        return jnp.sum(jnp.sin(o))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_flash_vjp_sliding_window_gradients():
+    b, h, s, d = 1, 2, 64, 16
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d))
+    k = jax.random.normal(keys[1], (b, h, s, d))
+    v = jax.random.normal(keys[2], (b, h, s, d))
+    w = 24
+
+    def loss_flash(q, k, v):
+        o = attention.attention_xla_skip(q, k, v, causal=True, window=w,
+                                         q_chunk=16, kv_chunk=16)
+        return jnp.sum(o * o)
+
+    def loss_ref(q, k, v):
+        o = fp_ref.attention_ref(q, k, v, causal=True, window=w)
+        return jnp.sum(o * o)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-4)
