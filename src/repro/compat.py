@@ -1,0 +1,80 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern JAX API surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, dict-returning
+``Compiled.cost_analysis()``); this container ships JAX 0.4.x where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication-check kwarg ``check_rep`` instead of ``check_vma``;
+  * ``jax.sharding.AxisType`` does not exist and ``jax.make_mesh`` takes no
+    ``axis_types`` kwarg (every axis is implicitly Auto);
+  * ``Compiled.cost_analysis()`` returns a *list* with one properties dict
+    per device program rather than the dict itself.
+
+Everything that touches one of those three surfaces goes through this
+module so the rest of the tree reads as if it were on one JAX version.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "cost_analysis_dict"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f=None, /, **kwargs):
+        # modern kwarg name -> legacy one; drop kwargs 0.4.x never grew
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:  # partial-application form: shard_map(mesh=..., ...)
+            return lambda g: shard_map(g, **kwargs)
+        return _legacy_shard_map(f, **kwargs)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[tuple] = None, **kwargs):
+    """``jax.make_mesh`` that tolerates missing ``axis_types`` support.
+
+    ``axis_types=None`` (the default) requests Auto on every axis — which is
+    also what 0.4.x does implicitly, so on old JAX the kwarg is simply
+    dropped.  Passing explicit non-Auto types on 0.4.x raises: silently
+    ignoring Explicit/Manual would change program semantics.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        if axis_types is None:
+            axis_types = ((jax.sharding.AxisType.Auto,)
+                          * len(tuple(axis_names)))
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types, **kwargs)
+    if axis_types is not None:
+        names = {type(t).__name__ + "." + getattr(t, "name", str(t))
+                 for t in axis_types}
+        if names - {"AxisType.Auto"}:
+            raise NotImplementedError(
+                f"axis_types={axis_types} requires jax.sharding.AxisType "
+                f"(JAX >= 0.5); this JAX is {jax.__version__}")
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Modern JAX returns the properties dict; 0.4.x returns a list of dicts
+    (one per device program — for our single-program jits, length 1).
+    Always returns a dict; empty when XLA reports nothing.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return ca
+    if not ca:
+        return {}
+    return ca[0]

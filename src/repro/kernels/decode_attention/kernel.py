@@ -26,6 +26,7 @@ NEG_INF = -1e30
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                    *, scale: float, bkv: int):
+    bi = pl.program_id(0)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -34,7 +35,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    cache_len = len_ref[0]
+    cache_len = len_ref[bi]  # per-request live length (ragged batch)
     k_start = ki * bkv
     # Skip blocks entirely beyond the live cache (no work issued).
     @pl.when(k_start < cache_len)
@@ -66,7 +67,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             cache_len: jax.Array, *, scale: float, bkv: int,
                             interpret: bool) -> jax.Array:
-    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar array.
+    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar or
+    (b,) per-request lengths (scalar-prefetched; each batch program masks to
+    its own live length).
 
     Returns (b, h, 1, d)."""
     b, h, _, d = q.shape
@@ -92,9 +95,11 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((1, 1), jnp.float32),
         ],
     )
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
     return pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, bkv=bkv),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         interpret=interpret,
-    )(cache_len.reshape(1).astype(jnp.int32), q, k, v)
+    )(lens, q, k, v)

@@ -19,7 +19,8 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      interpret: bool | None = None) -> jax.Array:
     """Single-token GQA attention against a (possibly partially filled) cache.
 
-    q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar array.
+    q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int32 scalar array or
+    (b,) per-request live lengths (ragged continuous batch).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -63,7 +64,11 @@ def decode_attention_splitk(q: jax.Array, k: jax.Array, v: jax.Array,
     pos = base[:, None] + jnp.arange(chunk)[None, :]          # (splits, chunk)
     sc = jnp.einsum("bhqd,bhckd->bhcqk", q.astype(jnp.float32),
                     kc.astype(jnp.float32)) * scale           # (b,h,c,1,chunk)
-    mask = (pos < cache_len)[None, None, :, None, :]
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:  # per-request lengths -> (b, 1, 1, 1, 1)
+        mask = pos[None, None, :, None, :] < cl[:, None, None, None, None]
+    else:
+        mask = (pos < cl)[None, None, :, None, :]
     sc = jnp.where(mask, sc, NEG_INF)
     m = jnp.max(sc, axis=-1, keepdims=True)                   # (b,h,c,1,1)
     p = jnp.where(mask, jnp.exp(sc - m), 0.0)

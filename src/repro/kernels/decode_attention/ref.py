@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q, k, v, cache_len, *, scale=None):
-    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int scalar."""
+    """q: (b, h, 1, d); k, v: (b, kv_h, s, d); cache_len: int scalar or
+    (b,) per-request live lengths."""
     b, h, _, d = q.shape
     kv_h, s = k.shape[1], k.shape[2]
     scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
@@ -15,7 +16,11 @@ def decode_attention_ref(q, k, v, cache_len, *, scale=None):
     v = jnp.repeat(v, h // kv_h, axis=1)
     s_vec = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                        k.astype(jnp.float32)) * scale
-    mask = (jnp.arange(s) < cache_len)[None, None, None, :]
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        mask = jnp.arange(s)[None, None, None, :] < cl[:, None, None, None]
+    else:
+        mask = (jnp.arange(s) < cl)[None, None, None, :]
     s_vec = jnp.where(mask, s_vec, -1e30)
     p = jax.nn.softmax(s_vec, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)

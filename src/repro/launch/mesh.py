@@ -2,11 +2,14 @@
 
 A FUNCTION, not a module-level constant, so importing this module never
 touches jax device state (device count locks on first jax init).
+
+Meshes are built through ``repro.compat.make_mesh`` so the same code runs on
+JAX versions with and without ``jax.sharding.AxisType``.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,13 +17,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU tests/examples (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"))

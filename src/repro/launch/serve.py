@@ -1,4 +1,5 @@
-"""Serving launcher: pack a model offline, serve batched requests.
+"""Serving launcher: pack a model offline, serve with token-level
+continuous batching (freed slots are refilled mid-flight from the queue).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch bitnet-0.73b --reduced \
@@ -24,7 +25,9 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--n-requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length; actual lengths are mixed "
+                         "uniformly in [4, prompt-len]")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
@@ -39,10 +42,11 @@ def main():
     packed = transformer.pack_params(cfg, params)
 
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                        size=args.prompt_len),
+    plens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
+                         size=args.n_requests)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=int(plen)),
                     max_new_tokens=args.max_new)
-            for _ in range(args.n_requests)]
+            for plen in plens]
     eng = ServingEngine(cfg, packed, max_seq=args.prompt_len + args.max_new,
                         batch_slots=args.batch_slots)
     t0 = time.perf_counter()
@@ -51,7 +55,8 @@ def main():
     total_new = sum(len(r.output) for r in reqs)
     ttfts = [r.ttft_s for r in reqs]
     print(f"served {len(reqs)} requests, {total_new} tokens in {wall:.2f}s "
-          f"-> {total_new / wall:.1f} tok/s aggregate")
+          f"-> {total_new / wall:.1f} tok/s aggregate "
+          f"({eng.stats['mid_flight_admissions']} mid-flight admissions)")
     print(f"TTFT: mean {np.mean(ttfts)*1e3:.0f}ms  "
           f"p90 {np.percentile(ttfts, 90)*1e3:.0f}ms")
 

@@ -303,10 +303,13 @@ def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
                          window: Optional[int] = None) -> jax.Array:
     """Single-token attention vs cache. q: (b, h, 1, d); k/v: (b, kv_h, S, d).
 
-    Positions in [0, cache_len) are live; with a sliding window only the last
-    ``window`` of those are attended (the paper's DA unit masking).  The
-    sequence dim may be sharded — max/sum reductions become collectives under
-    SPMD (flash-decoding over the mesh).
+    ``cache_len`` is a scalar (shared length) or a (b,) vector of per-request
+    live lengths (ragged continuous batch).  Positions in [0, cache_len) are
+    live; with a sliding window only the last ``window`` of those are
+    attended (the paper's DA unit masking).  Padded/stale cache positions at
+    or beyond a request's length are never attended.  The sequence dim may be
+    sharded — max/sum reductions become collectives under SPMD
+    (flash-decoding over the mesh).
     """
     b, h, _, d = q.shape
     kv_h, S = k.shape[1], k.shape[2]
@@ -316,10 +319,12 @@ def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
     sc = jnp.einsum("bkgd,bksd->bkgs", qg, k,
                     preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(S)
-    mask = pos[None, None, None, :] < cache_len
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:  # (b,) per-request lengths -> (b, 1, 1, 1)
+        cl = cl[:, None, None, None]
+    mask = pos[None, None, None, :] < cl
     if window is not None:
-        mask = jnp.logical_and(mask,
-                               pos[None, None, None, :] >= cache_len - window)
+        mask = jnp.logical_and(mask, pos[None, None, None, :] >= cl - window)
     sc = jnp.where(mask, sc, NEG_INF)
     m = jnp.max(sc, axis=-1, keepdims=True)
     p = jnp.where(mask, jnp.exp(sc - m), 0.0)
@@ -337,11 +342,26 @@ def decode_attention(q, k, v, cache_len, *, window=None, impl="xla"):
     return decode_attention_xla(q, k, v, cache_len, window=window)
 
 
+def update_cache_slice(cache: jax.Array, new: jax.Array, pos,
+                       axis: int = 1) -> jax.Array:
+    """Write ``new`` into ``cache`` at sequence offset ``pos`` along ``axis``.
+
+    ``pos`` is a scalar (all batch rows write at the same offset) or a (b,)
+    vector of per-row offsets (ragged continuous batch: each decode slot
+    appends at its own live length).  Batch is axis 0."""
+    p = jnp.asarray(pos) if not isinstance(pos, int) else pos
+    if isinstance(p, jax.Array) and p.ndim == 1:
+        def row(c, n, pi):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), pi, axis=axis - 1)
+        return jax.vmap(row)(cache, new, p)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), p, axis=axis)
+
+
 def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
                     v_new: jax.Array, pos) -> Tuple[jax.Array, jax.Array]:
-    """Write new KV at position pos. Caches: (b, S, kv_h, hd); new: (b, t, kv_h, hd)."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
-    return k_cache, v_cache
+    """Write new KV at position pos (scalar or per-row (b,) vector).
+    Caches: (b, S, kv_h, hd); new: (b, t, kv_h, hd)."""
+    return (update_cache_slice(k_cache, k_new, pos, axis=1),
+            update_cache_slice(v_cache, v_new, pos, axis=1))

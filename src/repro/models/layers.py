@@ -86,21 +86,24 @@ def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def rope_angles(positions: jax.Array, hd: int, theta: float) -> jax.Array:
-    """(s,) int positions -> (s, hd/2) angles m*theta_t."""
+    """(s,) or (b, s) int positions -> (s, hd/2) or (b, s, hd/2) angles.
+
+    The batched form carries ragged per-request decode positions (each slot
+    in a continuous batch sits at its own cache offset)."""
     t = jnp.arange(hd // 2, dtype=jnp.float32)
     inv_freq = theta ** (-2.0 * t / hd)
-    return positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return positions.astype(jnp.float32)[..., None] * inv_freq
 
 
 def apply_rope(x: jax.Array, angles: jax.Array, style: str) -> jax.Array:
-    """x: (..., s, n_heads, hd); angles: (s, hd/2).
+    """x: (..., s, n_heads, hd); angles: (s, hd/2) or (b, s, hd/2).
 
     style="consecutive" — paper eq. 5 (rotate contiguous halves; the
     streaming-friendly form TeLLMe uses after the eq. 6 weight permutation).
     style="interleaved" — paper eq. 4 (canonical LLaMA pairing).
     """
-    cos = jnp.cos(angles)[:, None, :].astype(x.dtype)  # (s, 1, hd/2)
-    sin = jnp.sin(angles)[:, None, :].astype(x.dtype)
+    cos = jnp.cos(angles)[..., :, None, :].astype(x.dtype)  # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :].astype(x.dtype)
     hd = x.shape[-1]
     if style == "consecutive":
         x1 = x[..., : hd // 2]

@@ -222,10 +222,10 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             vq, vs = q_kv(v)
             kc, vc = attention.update_kv_cache(cache["k"], cache["v"], kq,
                                                vq, cache_len)
-            ks_c = jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], ks, cache_len, axis=1)
-            vs_c = jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], vs, cache_len, axis=1)
+            ks_c = attention.update_cache_slice(cache["k_scale"], ks,
+                                                cache_len, axis=1)
+            vs_c = attention.update_cache_slice(cache["v_scale"], vs,
+                                                cache_len, axis=1)
             new_cache = {"k": kc, "v": vc, "k_scale": ks_c, "v_scale": vs_c}
             kc_r, vc_r, ks_r, vs_r = jax.lax.optimization_barrier(
                 (kc, vc, ks_c, vs_c))
@@ -428,23 +428,45 @@ def lm_head_loss_chunked(cfg: ModelConfig, params: dict, x: jax.Array,
 
 
 def prefill_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
-                 cache: dict, remat: bool = False):
-    """Prompt -> (last-token logits (b, vocab), filled cache)."""
+                 cache: dict, remat: bool = False,
+                 lengths: Optional[jax.Array] = None):
+    """Prompt -> (last-token logits (b, vocab), filled cache).
+
+    ``lengths`` (optional, (b,) int32) supports ragged right-padded batches:
+    row i's logits are taken at position ``lengths[i] - 1`` (its last real
+    token) instead of the padded final position.  Causality guarantees real
+    positions never attend to the padded tail; the tail's KV entries are
+    masked out downstream by the per-slot decode length.
+    """
     x = _embed_in(cfg, params, inputs, ctx)
     s = x.shape[1]
     positions = jnp.arange(s)
     x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "full",
                                None, remat)
-    logits = _lm_head(cfg, params, x[:, -1:], ctx)
+    if lengths is None:
+        last = x[:, -1:]
+    else:
+        idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+        last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = _lm_head(cfg, params, last, ctx)
     return logits[:, 0], new_cache
 
 
 def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
                 cache: dict, cache_len: jax.Array):
-    """One token (b, 1) + cache + live length -> (logits (b, vocab), cache)."""
+    """One token (b, 1) + cache + live length -> (logits (b, vocab), cache).
+
+    ``cache_len`` is a scalar (all rows at the same offset) or a (b,) vector
+    of per-request live lengths: each row writes its KV at its own offset,
+    rotates its query/key by its own position, and attends only its own
+    [0, cache_len[i]] prefix — the ragged decode step continuous batching
+    needs.
+    """
     x = _embed_in(cfg, params, inputs, ctx)
-    positions = cache_len + jnp.arange(1)
+    cl = jnp.asarray(cache_len)
+    positions = cl[..., None] + jnp.arange(1)  # (1,) or (b, 1)
     x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "step",
-                               cache_len, remat=False)
+                               cl, remat=False)
     logits = _lm_head(cfg, params, x, ctx)
     return logits[:, 0], new_cache

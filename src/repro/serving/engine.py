@@ -1,18 +1,43 @@
-"""Serving engine: disaggregated prefill/decode over packed ternary params.
+"""Serving engine: token-level continuous batching over packed ternary params.
 
 The paper's system-level claim — prefill and decode are different machines
-and both must be first-class — is the organizing principle here:
+and both must be first-class — is the organizing principle here, upgraded
+from slot-level to token-level admission:
 
-  * prefill path: full-prompt fused attention (compute-bound), emits the KV
-    cache + first token;
-  * decode path: batched single-token steps against the cache
-    (bandwidth-bound on cache + packed weight streams);
-  * batching: requests are grouped into fixed decode slots; finished slots
-    are refilled from the admission queue at prefill boundaries (a simple
-    continuous-batching scheme — slot-level, not token-level, admission).
+  * prefill path: per-request fused attention (compute-bound) over the
+    prompt, bucketed to ``prefill_bucket`` lengths so the jit cache stays
+    small; emits the request's KV prefix + first token;
+  * decode path: one batched single-token step per tick against the shared
+    slot cache (bandwidth-bound on cache + packed weight streams), with a
+    **per-slot length vector** — every slot writes its KV at its own live
+    offset, rotates by its own position, and attends only its own
+    [0, cache_len[i]] prefix (padded/stale cache positions are never
+    attended);
+  * batching: a fixed array of decode slots over one shared KV cache.  The
+    moment a slot finishes (max_new_tokens reached or cache exhausted) it is
+    freed and the next queued request is prefilled *into that slot
+    mid-flight* — the other slots never stop decoding.
 
-Both step functions are jit'd once per (batch, cache_len) bucket; greedy
-sampling by default, temperature optional.
+Slot state machine (host side, one ``_Slot`` per decode lane):
+
+    FREE --admit(prefill + adopt-into-slot + first token)--> ACTIVE
+    ACTIVE --decode tick (emitted += 1, cache_len += 1)--> ACTIVE
+    ACTIVE --emitted == max_new_tokens or cache_len == max_seq--> FREE
+
+Device state is two jit'd programs + one adopter:
+
+  * ``_prefill_one(params, tokens(1, Lb), cache, lengths(1,))`` — compiled
+    once per prompt-length bucket Lb; right-padded, logits gathered at the
+    last *real* token via ``prefill_step(..., lengths=...)``;
+  * ``_adopt(cache, one_cache, slot)`` — writes the batch-1 prefilled cache
+    into batch row ``slot`` of the shared cache (donated, so it is an
+    in-place scatter on the device buffer);
+  * ``_decode(params, tokens(b, 1), cache, cache_len(b,))`` — compiled once;
+    the length vector makes the step ragged-correct for any mix of slots.
+
+Greedy sampling by default; per-request temperature optional.  Per-request
+TTFT (admission wait + prefill) and aggregate throughput are recorded on the
+requests / ``engine.stats``.
 """
 
 from __future__ import annotations
@@ -20,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from collections import deque
 from typing import List, Optional
 
 import jax
@@ -38,83 +64,186 @@ class Request:
     temperature: float = 0.0           # 0 = greedy
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    ttft_s: Optional[float] = None     # time to first token
+    ttft_s: Optional[float] = None     # time to first token (incl. queueing)
     done: bool = False
+
+
+class _Slot:
+    """Host-side state for one decode lane of the shared cache."""
+
+    __slots__ = ("request", "tokens", "cache_len", "last_token")
+
+    def __init__(self):
+        self.request: Optional[Request] = None
+        self.tokens: List[int] = []
+        self.cache_len: int = 0
+        self.last_token: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+    def free(self) -> None:
+        r = self.request
+        r.output = np.asarray(self.tokens, np.int32)
+        r.done = True
+        self.request = None
+        self.tokens = []
+        self.cache_len = 0
+        self.last_token = 0
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, packed_params, *, max_seq: int,
                  batch_slots: int = 4, ctx: Optional[Ctx] = None,
-                 seed: int = 0):
+                 seed: int = 0, prefill_bucket: int = 16,
+                 cache_dtype=jnp.bfloat16):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
         self.slots = batch_slots
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.cache_dtype = cache_dtype
         self.ctx = ctx or Ctx(mode="packed", group_size=cfg.group_size,
                               attn_q_chunk=128, attn_kv_chunk=128)
         self.key = jax.random.PRNGKey(seed)
+        self.stats: dict = {}
 
         cfg_, ctx_ = self.cfg, self.ctx
 
         @jax.jit
-        def _prefill(params, tokens, cache):
-            return transformer.prefill_step(cfg_, params, tokens, ctx_, cache)
+        def _prefill_one(params, tokens, cache, lengths):
+            return transformer.prefill_step(cfg_, params, tokens, ctx_, cache,
+                                            lengths=lengths)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _adopt(cache, one_cache, slot):
+            # every cache leaf is (layers, batch, ...); the donor's batch is
+            # 1 and its seq extent (when the leaf has one) may be shorter
+            # than the shared cache's max_seq — write only the donor prefix
+            # into batch row `slot` so admission traffic scales with the
+            # prompt bucket, not max_seq
+            def write(full, new):
+                start = (0, slot) + (0,) * (full.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    full, new.astype(full.dtype), start)
+            return jax.tree_util.tree_map(write, cache, one_cache)
 
         @functools.partial(jax.jit, donate_argnums=(2,))
         def _decode(params, tokens, cache, cache_len):
             return transformer.decode_step(cfg_, params, tokens, ctx_, cache,
                                            cache_len)
 
-        self._prefill = _prefill
+        self._prefill_one = _prefill_one
+        self._adopt = _adopt
         self._decode = _decode
 
-    def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
-        if temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
+    # -- sampling ----------------------------------------------------------
+
+    def _sample(self, logits: jax.Array, temps: List[float]) -> np.ndarray:
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        if all(t <= 0.0 for t in temps):
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return np.asarray(jax.random.categorical(
-            sub, logits / temperature, axis=-1))
+        t = jnp.maximum(jnp.asarray(temps, jnp.float32), 1e-6)[:, None]
+        sampled = np.asarray(jax.random.categorical(
+            sub, logits.astype(jnp.float32) / t, axis=-1))
+        return np.where(np.asarray(temps) > 0.0, sampled, greedy)
+
+    # -- admission (prefill into a freed slot) -----------------------------
+
+    def _bucket(self, plen: int) -> int:
+        if self.cfg.block_kind != "attn":
+            # recurrent state (SSM / xLSTM) integrates every input token, so
+            # right-padding would pollute it — prefill at the exact length
+            return plen
+        b = self.prefill_bucket
+        return min(self.max_seq, ((plen + b - 1) // b) * b)
+
+    def _admit(self, cache, slot_idx: int, slot: _Slot, req: Request,
+               t_submit: float):
+        plen = len(req.prompt)  # <= max_seq, validated up front in run()
+        lb = self._bucket(plen)
+        toks = np.zeros((1, lb), np.int32)
+        toks[0, :plen] = req.prompt
+        # bucket-length donor cache: prefill fills exactly [0, lb) and
+        # _adopt writes only that prefix into the shared cache
+        one_cache = transformer.init_cache(self.cfg, 1, lb, self.cache_dtype)
+        logits, one_cache = self._prefill_one(
+            self.params, jnp.asarray(toks), one_cache,
+            jnp.asarray([plen], jnp.int32))
+        tok = int(self._sample(logits, [req.temperature])[0])
+        req.ttft_s = time.perf_counter() - t_submit
+        cache = self._adopt(cache, one_cache,
+                            jnp.asarray(slot_idx, jnp.int32))
+        slot.request = req
+        slot.tokens = [tok]
+        slot.cache_len = plen
+        slot.last_token = tok
+        self.stats["admissions"] = self.stats.get("admissions", 0) + 1
+        return cache
+
+    # -- main loop ---------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve all requests; simple slot-refill continuous batching."""
-        queue = list(requests)
-        while queue:
-            batch = queue[: self.slots]
-            queue = queue[self.slots:]
-            self._run_batch(batch)
-        return requests
-
-    def _run_batch(self, batch: List[Request]) -> None:
-        b = len(batch)
-        plen = max(len(r.prompt) for r in batch)
-        # left-pad-free: right-align prompts into a common length by
-        # repeating the first token (masked-off positions do not matter for
-        # causal decoding of the final position)
-        toks = np.stack([
-            np.pad(r.prompt, (plen - len(r.prompt), 0), mode="edge")
-            for r in batch]).astype(np.int32)
-        cache = transformer.init_cache(self.cfg, b, self.max_seq,
-                                       jnp.bfloat16)
+        """Serve all requests with token-level continuous batching."""
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
-        logits.block_until_ready()
-        ttft = time.perf_counter() - t0
-        outs = [[] for _ in range(b)]
-        cur = self._sample(logits, batch[0].temperature)
-        for i, r in enumerate(batch):
-            r.ttft_s = ttft
-            outs[i].append(int(cur[i]))
-        max_new = max(r.max_new_tokens for r in batch)
-        pos = plen
-        for _ in range(max_new - 1):
-            logits, cache = self._decode(
-                self.params, jnp.asarray(cur[:, None], jnp.int32), cache,
-                jnp.asarray(pos, jnp.int32))
-            cur = self._sample(logits, batch[0].temperature)
-            pos += 1
-            for i in range(b):
-                if len(outs[i]) < batch[i].max_new_tokens:
-                    outs[i].append(int(cur[i]))
-        for i, r in enumerate(batch):
-            r.output = np.asarray(outs[i], np.int32)
-            r.done = True
+        self.stats = {"admissions": 0, "decode_steps": 0,
+                      "mid_flight_admissions": 0}
+        for r in requests:  # validate up front: a bad request must not
+            if len(r.prompt) > self.max_seq:  # abandon in-flight work
+                raise ValueError(
+                    f"prompt length {len(r.prompt)} > max_seq "
+                    f"{self.max_seq}")
+        queue = deque(requests)
+        slots = [_Slot() for _ in range(self.slots)]
+        cache = transformer.init_cache(self.cfg, self.slots, self.max_seq,
+                                       self.cache_dtype)
+        while queue or any(s.active for s in slots):
+            # refill every free slot from the queue (token-level admission:
+            # this happens between decode ticks, while other slots hold
+            # their live state in the shared cache)
+            # mid-flight = a refill while slots that were already decoding
+            # stay live; snapshot before the pass so neither the initial
+            # fill nor same-tick wave refills count
+            was_active = (self.stats["decode_steps"] > 0
+                          and any(s.active for s in slots))
+            for i, s in enumerate(slots):
+                if s.active or not queue:
+                    continue
+                cache = self._admit(cache, i, s, queue.popleft(), t0)
+                if was_active:
+                    self.stats["mid_flight_admissions"] += 1
+                # request finished at prefill (max_new==1 or full cache)
+                if (len(s.tokens) >= s.request.max_new_tokens
+                        or s.cache_len >= self.max_seq):
+                    s.free()
+            active = [s for s in slots if s.active]
+            if not active:
+                continue  # queue may still hold work for the freed slots
+            toks = np.asarray([[s.last_token] for s in slots], np.int32)
+            lens = np.asarray([s.cache_len for s in slots], np.int32)
+            logits, cache = self._decode(self.params, jnp.asarray(toks),
+                                         cache, jnp.asarray(lens))
+            temps = [s.request.temperature if s.active else 0.0
+                     for s in slots]
+            cur = self._sample(logits, temps)
+            self.stats["decode_steps"] += 1
+            for s, tok in zip(slots, cur):
+                if not s.active:
+                    continue
+                s.tokens.append(int(tok))
+                s.last_token = int(tok)
+                s.cache_len += 1
+                if (len(s.tokens) >= s.request.max_new_tokens
+                        or s.cache_len >= self.max_seq):
+                    s.free()
+        wall = time.perf_counter() - t0
+        total = sum(len(r.output) for r in requests)
+        self.stats.update({
+            "wall_s": wall,
+            "total_new_tokens": total,
+            "tokens_per_s": total / wall if wall > 0 else float("inf"),
+            "ttft_s": [r.ttft_s for r in requests],
+        })
+        return requests

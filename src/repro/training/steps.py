@@ -88,8 +88,9 @@ def make_train_step_ddp(cfg: ModelConfig, ctx: Ctx, optimizer: Optimizer,
     """
     import dataclasses
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     # inside shard_map every axis is manual: sharding constraints are
     # meaningless (and rejected) — drop the hook for the per-shard body

@@ -18,9 +18,9 @@ def test_gpipe_matches_sequential_on_4_devices():
         from repro.runtime.pipeline import (pipeline_forward,
                                             split_layers_into_stages)
 
+        from repro.compat import make_mesh
         S, L, D = 4, 8, 16
-        mesh = jax.make_mesh((S,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((S,), ("pod",))
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (L, D, D)) * (0.5 / D ** 0.5)
 

@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from benchmarks import analytic
+from repro.compat import cost_analysis_dict
 from repro.configs import ARCHS, PAPER_ARCH, get_config
 from repro.core import bitlinear, ternary
 from repro.models import transformer
@@ -45,7 +46,7 @@ def test_hlo_cost_matches_analytic_for_single_matmul():
 
     f = jax.jit(lambda x, p: bitlinear.apply_packed(p, x, g=5,
                                                     out_dtype=jnp.float32))
-    ca = f.lower(x, p).compile().cost_analysis()
+    ca = cost_analysis_dict(f.lower(x, p).compile())
     flops = ca.get("flops", 0.0)
     analytic_flops = 2 * m * n * k
     # the integer dot dominates; quant/unpack adds elementwise work

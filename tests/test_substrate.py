@@ -9,7 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint import CheckpointManager
 from repro.checkpoint.manager import install_sigterm_handler
@@ -93,9 +95,8 @@ def test_compression_error_shrinks_with_feedback():
 def test_compressed_psum_single_device():
     """shard_map psum path on a 1-device mesh (degenerate reduction)."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
     g = jnp.linspace(-1, 1, 32)
     err = jnp.zeros_like(g)
 
@@ -170,8 +171,8 @@ def test_checkpoint_elastic_reshard(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, tree, blocking=True)
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("model",))
     sh = {"w": NamedSharding(mesh, P("model", None))}
     restored = mgr.restore(1, tree, shardings=sh)
     assert restored["w"].sharding == sh["w"]

@@ -66,8 +66,8 @@ def test_multi_device_sharded_train_executes():
         from repro.runtime import sharding as shd
         from repro.training import make_train_step
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_config("granite-3-2b").reduced(
             n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
             d_ff=128, vocab_size=128)
@@ -109,8 +109,8 @@ def test_multi_device_compressed_ddp_executes():
         from repro.optim.compression import init_error_state
         from repro.training.steps import make_train_step_ddp
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         cfg = get_config("qwen1.5-0.5b").reduced(
             n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=128)
         ctx = Ctx(mode="qat", attn_q_chunk=16, attn_kv_chunk=16)
