@@ -1,21 +1,29 @@
-"""Serving throughput under token-level continuous batching.
+"""Serving throughput: device-resident fused decode vs per-tick baseline.
 
-Mixed prompt lengths + mixed generation lengths stress exactly what the
-engine upgrade bought: freed decode slots are refilled mid-flight, so slot
-utilization (decoded tokens / (decode ticks x slots)) stays high even when
-requests finish at different times, and per-request TTFT separates queueing
-wait from prefill cost.
+Two engine configurations over the same mixed workload, per slot count:
 
-Reports aggregate tok/s, decode-only tok/s, slot utilization, and the
-per-request TTFT distribution for a sweep of slot counts; CPU wall times on
-the reduced BitNet — shape of the scaling, not absolute TPU numbers.
+  * ``fused``    — decode_block-tick `lax.scan` with on-device sampling +
+    chunked in-place prefill (this PR's hot path): one jit dispatch + one
+    host sync per `decode_block` tokens per lane;
+  * ``per_tick`` — decode_block=1 and whole-prompt chunks, i.e. the PR-1
+    engine's dispatch pattern (one dispatch + full host sync per token, one
+    prefill call per prompt).
+
+Mixed prompt/generation lengths stress mid-flight admission; the report
+separates aggregate tok/s from decode-only tok/s (prefill wall time
+excluded) and gives the per-request TTFT distribution.  CPU wall times on
+the reduced BitNet — shape of the scaling, not absolute TPU numbers (the
+Pallas kernels run in interpret mode on this host).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_throughput
+JSON: PYTHONPATH=src python -m benchmarks.serving_throughput \
+          --json BENCH_serving.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -41,63 +49,106 @@ def make_requests(rng, n, vocab, max_prompt, max_new):
     ]
 
 
-def run_one(cfg, packed, *, slots, n_requests, max_prompt, max_new, seed):
+def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
+            max_prompt, max_new, seed, mode):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new)
     eng = ServingEngine(cfg, packed, max_seq=max_prompt + max_new,
-                        batch_slots=slots)
-    # warmup: one request per prefill-length bucket so every jit shape the
-    # timed run can hit (prefill buckets, adopt, decode) compiles here
-    buckets = sorted({eng._bucket(plen)
-                      for plen in range(min(4, max_prompt), max_prompt + 1)})
-    warm = [Request(prompt=rng.integers(0, cfg.vocab_size, size=lb),
-                    max_new_tokens=2) for lb in buckets]
-    eng.run(warm)
+                        batch_slots=slots, decode_block=decode_block,
+                        prefill_chunk=prefill_chunk)
+    # warmup: chunked prefill + fused decode compile O(1) shapes, so two
+    # tiny requests cover every program the timed run can hit
+    eng.run([Request(prompt=rng.integers(0, cfg.vocab_size, size=5),
+                     max_new_tokens=2) for _ in range(2)])
     t0 = time.perf_counter()
     eng.run(reqs)
     wall = time.perf_counter() - t0
     s = eng.stats
     total = s["total_new_tokens"]
-    decoded = total - len(reqs)  # first tokens come from prefill
-    util = (decoded / (s["decode_steps"] * slots)
+    util = (s["decode_tokens"] / (s["decode_steps"] * slots)
             if s["decode_steps"] else 1.0)
     ttfts = np.asarray([r.ttft_s for r in reqs])
     return {
+        "mode": mode,
         "slots": slots,
+        "decode_block": decode_block,
+        "prefill_chunk": eng.prefill_chunk,
         "tok_s": total / wall,
+        "decode_tok_s": s["decode_tok_s"],
+        "decode_blocks": s["decode_blocks"],
         "decode_steps": s["decode_steps"],
         "slot_util": util,
         "mid_flight": s["mid_flight_admissions"],
+        "max_chunks_between_decode_blocks":
+            s["max_chunks_between_decode_blocks"],
         "ttft_mean_ms": float(np.mean(ttfts)) * 1e3,
         "ttft_p50_ms": float(np.percentile(ttfts, 50)) * 1e3,
         "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
+        "ttft_p95_ms": float(np.percentile(ttfts, 95)) * 1e3,
     }
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--max-prompt", type=int, default=48)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--slots", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=56)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-baseline", action="store_true",
+                    help="only run the fused configuration")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write results to this JSON file")
     args = ap.parse_args()
 
     cfg = get_config("bitnet-0.73b").reduced(
         n_layers=2, d_model=128, n_heads=4, d_ff=256, vocab_size=256)
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     packed = transformer.pack_params(cfg, params)
+    common = dict(n_requests=args.n_requests, max_prompt=args.max_prompt,
+                  max_new=args.max_new, seed=args.seed)
 
-    print("slots,tok_s,slot_util,mid_flight,ttft_mean_ms,ttft_p50_ms,"
-          "ttft_p90_ms,decode_steps")
+    rows, speedup = [], {}
+    cols = ("mode,slots,tok_s,decode_tok_s,slot_util,mid_flight,"
+            "ttft_p50_ms,ttft_p95_ms,decode_blocks")
+    print(cols)
     for slots in args.slots:
-        r = run_one(cfg, packed, slots=slots, n_requests=args.n_requests,
-                    max_prompt=args.max_prompt, max_new=args.max_new,
-                    seed=args.seed)
-        print(f"{r['slots']},{r['tok_s']:.1f},{r['slot_util']:.2f},"
-              f"{r['mid_flight']},{r['ttft_mean_ms']:.0f},"
-              f"{r['ttft_p50_ms']:.0f},{r['ttft_p90_ms']:.0f},"
-              f"{r['decode_steps']}")
+        fused = run_one(cfg, packed, slots=slots,
+                        decode_block=args.decode_block,
+                        prefill_chunk=args.prefill_chunk, mode="fused",
+                        **common)
+        configs = [fused]
+        if not args.skip_baseline:
+            per_tick = run_one(cfg, packed, slots=slots, decode_block=1,
+                               prefill_chunk=args.max_prompt + args.max_new,
+                               mode="per_tick", **common)
+            configs.append(per_tick)
+            speedup[str(slots)] = fused["tok_s"] / per_tick["tok_s"]
+        for r in configs:
+            rows.append(r)
+            print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"
+                  f"{r['decode_tok_s']:.1f},{r['slot_util']:.2f},"
+                  f"{r['mid_flight']},{r['ttft_p50_ms']:.0f},"
+                  f"{r['ttft_p95_ms']:.0f},{r['decode_blocks']}")
+        if str(slots) in speedup:
+            print(f"# slots={slots}: fused vs per-tick speedup "
+                  f"{speedup[str(slots)]:.2f}x")
+
+    if args.json:
+        payload = {
+            "benchmark": "serving_throughput",
+            "host": {"backend": jax.default_backend(),
+                     "interpret_kernels": jax.default_backend() != "tpu"},
+            "workload": {**common, "decode_block": args.decode_block,
+                         "prefill_chunk": args.prefill_chunk},
+            "results": rows,
+            "speedup_fused_vs_per_tick": speedup,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
-"""Serve a packed ternary model with token-level continuous batching —
-the paper's end-to-end inference story (prefill AND decode first-class).
+"""Serve a packed ternary model with the device-resident serving loop —
+the paper's end-to-end inference story (prefill AND decode first-class,
+overlapped rather than serialized).
 
-Six requests with mixed prompt lengths share 3 decode slots: when a slot
-finishes, the next queued request is prefilled into it mid-flight while the
-other slots keep decoding.  Per-request TTFT therefore differs per request
-(queued ones include their wait).
+Six requests with mixed prompt lengths share 3 decode slots.  Admission is
+chunked and batched: every pending prompt advances one in-place chunk per
+wave, interleaved with fused 4-tick decode blocks, so in-flight lanes never
+stall for more than one chunk + one block dispatch.  Decode sampling, cache
+writes and done-masking all stay on device; the host syncs once per block.
 
 Run:  PYTHONPATH=src python examples/serve_bitnet.py
 """
@@ -32,20 +34,25 @@ requests = [
     for plen, gen in ((8, 16), (24, 6), (16, 12), (40, 16), (12, 8),
                       (32, 14))
 ]
-engine = ServingEngine(cfg, packed, max_seq=64, batch_slots=3)
+engine = ServingEngine(cfg, packed, max_seq=64, batch_slots=3,
+                       prefill_chunk=16, decode_block=4)
 t0 = time.perf_counter()
 engine.run(requests)
 wall = time.perf_counter() - t0
 
 total = sum(len(r.output) for r in requests)
+st = engine.stats
 print(f"served {len(requests)} requests / {total} new tokens "
-      f"in {wall:.2f}s -> {total/wall:.1f} tok/s aggregate")
-print(f"decode steps {engine.stats['decode_steps']}, "
-      f"admissions {engine.stats['admissions']} "
-      f"({engine.stats['mid_flight_admissions']} mid-flight into freed "
-      f"slots)")
+      f"in {wall:.2f}s -> {total/wall:.1f} tok/s aggregate, "
+      f"{st['decode_tok_s']:.1f} tok/s decode-only")
+print(f"decode blocks {st['decode_blocks']} ({st['decode_steps']} fused "
+      f"ticks), prefill waves {st['prefill_chunks']}, admissions "
+      f"{st['admissions']} ({st['mid_flight_admissions']} mid-flight), "
+      f"max {st['max_chunks_between_decode_blocks']} wave(s) between blocks")
+print(f"TTFT p50 {st['ttft_p50_s']*1e3:.0f}ms  p95 {st['ttft_p95_s']*1e3:.0f}ms")
 for i, r in enumerate(requests):
     print(f"  req{i}: prompt {len(r.prompt):3d} toks, "
           f"TTFT {r.ttft_s*1e3:6.1f}ms, out {r.output[:8].tolist()}...")
 assert engine.stats["mid_flight_admissions"] > 0
+assert engine.stats["max_chunks_between_decode_blocks"] <= 1
 print("serve_bitnet OK")

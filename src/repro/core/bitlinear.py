@@ -153,6 +153,83 @@ def apply_packed(params: dict, x: jax.Array, *, g: int = ternary.DEFAULT_G,
     return y.astype(out_dtype).reshape(lead + (codes.shape[-1],))
 
 
+def predecode(params: dict, *, g: int = ternary.DEFAULT_G) -> dict:
+    """Decode packed base-3 codes into a dense int8 ternary matrix.
+
+    The serving engine calls this at the top of its fused decode block so
+    the unpack runs once per block and is amortized over the block's ticks —
+    the software analogue of the paper's decode bandwidth argument (batch
+    several tokens against one pass over the weight stream).  The returned
+    dict routes ``linear_apply`` through :func:`apply_predecoded`, whose
+    math is bit-identical to ``apply_packed``'s XLA path (same int8 matmul
+    and float epilogue, minus the per-call unpack).
+    """
+    wt = ternary.unpack_ternary(params["codes"], g)
+    if wt.shape[0] < (1 << 24) // 127:
+        # the contraction can run on the fast f32 GEMM and stay EXACT:
+        # operands are integers with |acc| <= n_in * 127 < 2^24, so every
+        # partial sum is an exactly-representable f32 integer and the result
+        # is bit-identical to int32 accumulation regardless of reduction
+        # order.  Cast once here (per decode block), not per tick.
+        wt = wt.astype(jnp.float32)
+    out = {"wt": wt, "gamma": params["gamma"]}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def predecode_fused(parts: list, *, g: int = ternary.DEFAULT_G) -> dict:
+    """Fuse several packed linears that share the same input into ONE
+    pre-decoded matrix (n_in, sum n_out) with a per-column scale vector.
+
+    One activation quant + one GEMM per tick instead of one per projection
+    (QKV fusion, gate|up fusion — the classic serving-decode op-count cut).
+    Bit-identical to applying the parts separately: the shared input row has
+    a single absmax scale either way, each output column keeps its own
+    gamma, and every column's contraction is unchanged.
+    """
+    decoded = [predecode(p, g=g) for p in parts]
+    wt = jnp.concatenate([d["wt"] for d in decoded], axis=1)
+    gamma = jnp.concatenate([
+        jnp.broadcast_to(d["gamma"], (d["wt"].shape[1],)) for d in decoded])
+    out = {"wt": wt, "gamma": gamma}
+    if any("b" in d for d in decoded):
+        out["b"] = jnp.concatenate([
+            d["b"] if "b" in d else jnp.zeros((d["wt"].shape[1],),
+                                              jnp.float32)
+            for d in decoded])
+    return out
+
+
+def apply_predecoded(params: dict, x: jax.Array, *,
+                     out_dtype=jnp.bfloat16) -> jax.Array:
+    """Inference forward on pre-decoded ternary weights (see predecode).
+
+    Bit-identical to ``apply_packed``'s XLA path: same absmax int8
+    quantization (the int8 values kept in f32 when the exactness bound
+    holds — see predecode) and the same scale epilogue.
+    """
+    wt, gamma = params["wt"], params["gamma"]
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if wt.dtype == jnp.float32:  # exact f32-GEMM path
+        x_q, x_scale = ternary.absmax_quant_values(xf)
+        n_pad = wt.shape[0]
+        if x_q.shape[-1] < n_pad:  # same zero-pad as the packed XLA path
+            x_q = jnp.pad(x_q, [(0, 0), (0, n_pad - x_q.shape[-1])])
+        acc = jnp.dot(x_q, wt)  # exact: integer-valued f32 operands
+    else:
+        x_q, x_scale = ternary.absmax_quant(xf)
+        n_pad = wt.shape[0]
+        if x_q.shape[-1] < n_pad:
+            x_q = jnp.pad(x_q, [(0, 0), (0, n_pad - x_q.shape[-1])])
+        acc = ternary.ternary_matmul_ref(x_q, wt).astype(jnp.float32)
+    y = acc * x_scale * gamma
+    if "b" in params:
+        y = y + params["b"].astype(jnp.float32)
+    return y.astype(out_dtype).reshape(lead + (wt.shape[-1],))
+
+
 def apply(params: dict, x: jax.Array, *, mode: str = "qat",
           impl: str = IMPL_XLA, g: int = ternary.DEFAULT_G,
           out_dtype=None) -> jax.Array:

@@ -28,6 +28,18 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     s = k.shape[2]
     scale = 1.0 / float(d) ** 0.5
     bkv = min(bkv, s)
+    # Never pad the cache stream if a reasonable divisor block size exists:
+    # inside the serving engine's fused decode scan, a pad is a full
+    # KV-cache copy per tick.  Candidates are 8-aligned (Mosaic block dims)
+    # and >= 64; real cache geometries (powers of two) always have one.
+    # Otherwise padding beats a degenerate block size — keep the requested
+    # bkv and pad the tail, as before.
+    if s % bkv:
+        cand = bkv - bkv % 8
+        while cand > 64 and s % cand:
+            cand -= 8
+        if cand >= 8 and s % cand == 0:
+            bkv = cand
     pad = (-s) % bkv
     if pad:
         widths = ((0, 0), (0, 0), (0, pad), (0, 0))

@@ -90,6 +90,108 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _chunk_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, bq: int, bkv: int, window: int | None):
+    """Chunked-prefill variant: the q grid covers one prompt chunk per batch
+    row, each row's absolute positions starting at its scalar-prefetched
+    ``offset[b]``; the kv grid covers the whole cache row.  Same
+    online-softmax state machine as ``_flash_kernel``, but the block-skip
+    predicate is *dynamic* (it depends on the admission offset), so
+    fully-masked kv tiles are skipped at run time via ``pl.when`` instead of
+    being pruned from the grid."""
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    offset = off_ref[bi]  # per-row admission offset (ragged wave)
+    q_start = offset + qi * bq          # absolute position of first query row
+    k_start = ki * bkv
+    # dynamic block-skip: kv tiles entirely in the chunk's causal future (or
+    # entirely left of the sliding window) issue no MXU work
+    run = k_start <= q_start + bq - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bkv - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)   # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)   # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)   # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = k_ids <= q_ids
+        if window is not None:
+            mask = jnp.logical_and(mask, k_ids > q_ids - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_chunk_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                               offset: jax.Array, *, scale: float,
+                               window: int | None, bq: int, bkv: int,
+                               interpret: bool) -> jax.Array:
+    """q: (b, h, t, d) chunk queries; k, v: (b, kv_h, S, d) full cache rows;
+    offset: (b,) int32 per-row offsets (scalar-prefetched) -> (b, h, t, d).
+    """
+    b, h, t, d = q.shape
+    kv_h, S = k.shape[1], k.shape[2]
+    assert h % kv_h == 0 and t % bq == 0 and S % bkv == 0
+    group = h // kv_h
+    grid = (b, h, t // bq, S // bkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bi, hi, qi, ki, off_ref: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, qi, ki, off_ref:
+                         (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bi, hi, qi, ki, off_ref:
+                         (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki, off_ref:
+                               (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32).reshape(-1), (b,))
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, scale=scale, bq=bq, bkv=bkv,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=interpret,
+    )(off, q, k, v)
+
+
 def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          scale: float, causal: bool, window: int | None,
                          bq: int, bkv: int, interpret: bool) -> jax.Array:

@@ -39,3 +39,40 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                       window=window, bq=bq, bkv=bkv,
                                       interpret=interpret)
     return out[:, :, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bkv",
+                                             "interpret"))
+def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                        offset: jax.Array, *, window: int | None = None,
+                        bq: int = 128, bkv: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """Chunked-prefill GQA attention: per-row prompt chunks vs cache rows.
+
+    q: (b, h, t, d) — row i's chunk queries at absolute positions
+    offset[i] + [0, t); k, v: (b, kv_h, S, d) — the full cache rows
+    ([0, offset[i] + t) live).  ``offset`` is a traced scalar or (b,)
+    vector, so a single compiled shape serves every mix of admission
+    offsets — the O(1)-compile property chunked prefill relies on.
+    Pads t and S to block multiples; padded queries are sliced off and padded
+    keys sit beyond every real query's causal reach.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, t, d = q.shape
+    S = k.shape[2]
+    scale = 1.0 / float(d) ** 0.5
+    bq = min(bq, t)
+    bkv = min(bkv, S)
+    pad_q = (-t) % bq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    pad_kv = (-S) % bkv
+    if pad_kv:
+        widths = ((0, 0), (0, 0), (0, pad_kv), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = kernel.flash_chunk_prefill_pallas(
+        q, k, v, jnp.asarray(offset, jnp.int32), scale=scale, window=window,
+        bq=bq, bkv=bkv, interpret=interpret)
+    return out[:, :, :t]

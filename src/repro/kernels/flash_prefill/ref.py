@@ -40,6 +40,34 @@ def attention_ref(q, k, v, *, scale=None, causal=True, window=None):
                       ).astype(q.dtype)
 
 
+def chunk_attention_ref(q, k, v, offset, *, scale=None, window=None):
+    """Oracle for chunked-prefill attention.
+
+    q: (b, h, t, d) — row i's prompt chunk at absolute positions
+    offset[i] + [0, t); k, v: (b, kv_h, S, d) — the full cache rows,
+    [0, offset[i] + t) live.  Query j of row i attends key positions
+    <= offset[i] + j (optionally windowed).  offset: scalar or (b,).
+    """
+    b, h, t, d = q.shape
+    S = k.shape[2]
+    scale = (scale if scale is not None
+             else 1.0 / jnp.sqrt(d).astype(jnp.float32))
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32).reshape(-1), (b,))
+    q_ids = off[:, None, None] + jnp.arange(t)[None, :, None]  # (b, t, 1)
+    k_ids = jnp.arange(S)[None, None, :]
+    mask = (k_ids <= q_ids)[:, None]                           # (b, 1, t, S)
+    if window is not None:
+        mask = jnp.logical_and(mask, (k_ids > q_ids - window)[:, None])
+    s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
 def naive_attention(q, k, v, *, scale=None, causal=True, window=None):
     """Fig. 6b baseline — identical math, full dense S materialized.
 

@@ -13,6 +13,11 @@ Mirrors the paper's split (§3.6/§3.7):
       FLOPs, never materializes S.  This is the default XLA path and what
       the dry-run/roofline lowers.
     - kernels/flash_prefill    : the TPU Pallas kernel (block-skip grid).
+* Chunked prefill — ``chunk_prefill_attention``: a prompt chunk at cache
+  offset attends the already-written [0, offset) KV prefix of its cache row
+  plus its own causal triangle (kernels/flash_prefill's chunk variant on
+  TPU).  This is what lets the serving engine admit long prompts in bounded
+  slices interleaved with decode ticks.
 * Decode — single-token attention against the KV cache
   (``decode_attention_xla``; kernels/decode_attention on TPU), masked to the
   live cache length and optionally to a sliding window.
@@ -296,6 +301,116 @@ def prefill_attention(q, k, v, *, causal=True, window=None, impl="xla",
                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
     return attention_xla_skip(q, k, v, causal=causal, window=window,
                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def chunk_prefill_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                                offset: jax.Array, *,
+                                window: Optional[int] = None) -> jax.Array:
+    """Admission-chunk attention for chunked in-place prefill.
+
+    q: (b, h, t, d) — per-row prompt chunks, row i sitting at absolute
+    positions ``offset[i] + [0, t)`` of its cache row; k, v: (b, kv_h, S, d)
+    — the full cache rows whose ``[0, offset[i] + t)`` prefixes are live
+    (the chunk's own KV included).  Query j of row i attends key positions
+    ``<= offset[i] + j`` (and within the sliding window), so a chunk sees
+    the already-written prefix plus its own causal triangle; stale positions
+    beyond the prefix are causally masked.  ``offset`` is a traced scalar or
+    (b,) vector — one compiled shape serves every mix of prompt lengths and
+    admission offsets.
+    """
+    b, h, t, d = q.shape
+    kv_h, S = k.shape[1], k.shape[2]
+    gsz = h // kv_h
+    scale = 1.0 / float(d) ** 0.5
+    qg = q.reshape(b, kv_h, gsz, t, d)
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.broadcast_to(off, (b,))
+    q_pos = off[:, None] + jnp.arange(t)[None, :]            # (b, t)
+    k_pos = jnp.arange(S)
+
+    def dense(kd, vd, pos):
+        sc = jnp.einsum("bkgqd,bksd->bkgqs", qg, kd,
+                        preferred_element_type=jnp.float32) * scale
+        mask = pos[None, None, :] <= q_pos[:, :, None]       # (b, t, tile)
+        if window is not None:
+            mask = jnp.logical_and(
+                mask, pos[None, None, :] > q_pos[:, :, None] - window)
+        mask = mask[:, None, None]                           # (b,1,1,t,tile)
+        sc = jnp.where(mask, sc, NEG_INF)
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.where(mask, jnp.exp(sc - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(vd.dtype), vd,
+                         preferred_element_type=jnp.float32)
+        return (out / jnp.maximum(l, 1e-30)
+                ).reshape(b, h, t, d).astype(q.dtype)
+
+    if S <= t:  # single tile: the tiled scan would be pure overhead
+        return dense(k, v, k_pos)
+
+    # Tiled pass with runtime block-skip (the RPA "mask never generates
+    # work" property, dynamic because admission offsets are traced): kv
+    # tiles entirely beyond every row's causal reach — i.e. beyond
+    # max(offset) + t — are skipped via lax.cond, so an early admission
+    # wave pays O(offset + chunk), not O(max_seq).  Online-softmax carry
+    # across tiles, as in attention_xla_skip.
+    if S % t:  # pad the row to a tile multiple; padded keys sit beyond
+        pad = (-S) % t  # every live query position, so causality masks them
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        S += pad
+    n_tiles = S // t
+    hi = jnp.max(off) + t                # first dead position (scalar)
+    lo = (jnp.min(off) - window + 1) if window is not None else None
+    kt = k.reshape(b, kv_h, n_tiles, t, d)
+    vt = v.reshape(b, kv_h, n_tiles, t, d)
+    acc0 = jnp.zeros((b, kv_h, gsz, t, d), jnp.float32)
+    m0 = jnp.full((b, kv_h, gsz, t, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, gsz, t, 1), jnp.float32)
+
+    def body(carry, xs):
+        j, k_blk, v_blk = xs
+
+        def live(carry):
+            acc, m, l = carry
+            pos = j * t + jnp.arange(t)
+            sc = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+            mask = pos[None, None, :] <= q_pos[:, :, None]
+            if window is not None:
+                mask = jnp.logical_and(
+                    mask, pos[None, None, :] > q_pos[:, :, None] - window)
+            mask = mask[:, None, None]
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+            p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return acc, m_new, l
+
+        run = j * t < hi
+        if window is not None:
+            run = jnp.logical_and(run, (j + 1) * t - 1 >= lo)
+        return jax.lax.cond(run, live, lambda c: c, carry), None
+
+    tiles = (jnp.arange(n_tiles), jnp.moveaxis(kt, 2, 0),
+             jnp.moveaxis(vt, 2, 0))
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), tiles)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, t, d).astype(q.dtype)
+
+
+def chunk_prefill_attention(q, k, v, offset, *, window=None, impl="xla"):
+    """Dispatch chunk-vs-prefix attention: xla (dense masked) | pallas."""
+    if impl == "pallas":
+        from repro.kernels.flash_prefill import ops as fp_ops
+        return fp_ops.flash_chunk_prefill(q, k, v, offset, window=window)
+    return chunk_prefill_attention_xla(q, k, v, offset, window=window)
 
 
 def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,

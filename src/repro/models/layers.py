@@ -53,6 +53,8 @@ def linear_init(key, n_in, n_out, *, bias=False, dtype=jnp.float32):
 
 def linear_apply(p: dict, x: jax.Array, ctx: Ctx, *,
                  ternary_w: bool = True) -> jax.Array:
+    if "wt" in p:  # pre-decoded ternary (serving decode hot loop)
+        return bitlinear.apply_predecoded(p, x, out_dtype=x.dtype)
     if "codes" in p:  # packed inference params
         return bitlinear.apply_packed(p, x, g=ctx.group_size, impl=ctx.impl,
                                       out_dtype=x.dtype)
@@ -147,8 +149,12 @@ def mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32) -> dict:
 
 
 def mlp_apply(p: dict, x: jax.Array, ctx: Ctx, *, ternary_w=True) -> jax.Array:
-    g = linear_apply(p["gate"], x, ctx, ternary_w=ternary_w)
-    u = linear_apply(p["up"], x, ctx, ternary_w=ternary_w)
+    if "gateup" in p:  # fused projection (pre-decoded serving hot path)
+        gu = linear_apply(p["gateup"], x, ctx, ternary_w=ternary_w)
+        g, u = jnp.split(gu, 2, axis=-1)
+    else:
+        g = linear_apply(p["gate"], x, ctx, ternary_w=ternary_w)
+        u = linear_apply(p["up"], x, ctx, ternary_w=ternary_w)
     h = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
     return linear_apply(p["down"], h.astype(x.dtype), ctx, ternary_w=ternary_w)
 

@@ -6,10 +6,14 @@ by ``jax.lax.scan`` — one compiled layer body regardless of depth, which keeps
 80-layer 72B dry-run compiles tractable and is the idiomatic JAX production
 pattern (MaxText does the same).
 
-Three entry points mirror the paper's phases:
-  * ``forward``      — full-sequence logits (training; QAT ternary path)
-  * ``prefill_step`` — full prompt -> last-token logits + filled KV cache
-  * ``decode_step``  — one token + cache -> next logits + updated cache
+Four entry points mirror the paper's phases:
+  * ``forward``       — full-sequence logits (training; QAT ternary path)
+  * ``prefill_step``  — full prompt -> last-token logits + filled KV cache
+  * ``prefill_chunk`` — one admission wave: per-slot prompt chunks ->
+    masked in-place KV writes at per-row offsets of the shared multi-slot
+    cache, each attending its already-written prefix (chunked
+    continuous-batching admission)
+  * ``decode_step``   — one token + cache -> next logits + updated cache
 """
 
 from __future__ import annotations
@@ -21,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import bitlinear
 from repro.models import attention, layers, ssm, xlstm
 from repro.models.layers import Ctx
 
@@ -127,6 +132,55 @@ def pack_params(cfg: ModelConfig, params: dict) -> dict:
     return packed
 
 
+def predecode_packed(cfg: ModelConfig, params: dict) -> dict:
+    """Decode every packed linear's base-3 codes into dense int8 ternary
+    weights (vmapped over the stacked layer axis).
+
+    The serving engine calls this at the top of its fused decode block, so
+    the weight unpack runs once per block and is amortized across the
+    block's ticks — the software analogue of the paper's decode bandwidth
+    argument (batch tokens against one pass over the weight stream).
+    Outputs are bit-identical to running on the packed params (see
+    ``bitlinear.predecode``).  MoE expert banks keep their own packed
+    format and are left untouched.
+    """
+    g = cfg.group_size
+
+    def walk(p):
+        if isinstance(p, dict):
+            if "codes" in p:
+                return bitlinear.predecode(p, g=g)
+            return {k: walk(v) for k, v in p.items()}
+        return p
+
+    def fusable(d, names):
+        return all(n in d and "codes" in d[n] for n in names)
+
+    def layer(p):
+        out = {}
+        for k, v in p.items():
+            if k == "attn" and fusable(v, ("q", "k", "v")):
+                # QKV fusion: one quant + one GEMM per tick instead of three
+                out["attn"] = {
+                    "qkv": bitlinear.predecode_fused(
+                        [v["q"], v["k"], v["v"]], g=g),
+                    "o": walk(v["o"]),
+                }
+            elif k == "mlp" and fusable(v, ("gate", "up")):
+                out["mlp"] = {
+                    "gateup": bitlinear.predecode_fused(
+                        [v["gate"], v["up"]], g=g),
+                    "down": walk(v["down"]),
+                }
+            else:
+                out[k] = walk(v)
+        return out
+
+    out = {k: v for k, v in params.items() if k != "layers"}
+    out["layers"] = jax.vmap(layer)(params["layers"])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # KV cache / recurrent state
 # ---------------------------------------------------------------------------
@@ -171,13 +225,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
                 cache: Optional[dict], positions: jax.Array,
-                phase: str, cache_len) -> Tuple[jax.Array, Optional[dict]]:
+                phase: str, cache_len,
+                chunk_mask=None) -> Tuple[jax.Array, Optional[dict]]:
     b, t, _ = x.shape
-    q = layers.linear_apply(p["q"], x, ctx).reshape(b, t, cfg.n_heads, cfg.hd)
-    k = layers.linear_apply(p["k"], x, ctx).reshape(b, t, cfg.n_kv_heads,
-                                                    cfg.hd)
-    v = layers.linear_apply(p["v"], x, ctx).reshape(b, t, cfg.n_kv_heads,
-                                                    cfg.hd)
+    if "qkv" in p:  # fused projection (pre-decoded serving hot path)
+        qkv = layers.linear_apply(p["qkv"], x, ctx)
+        q, k, v = jnp.split(qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim],
+                            axis=-1)
+    else:
+        q = layers.linear_apply(p["q"], x, ctx)
+        k = layers.linear_apply(p["k"], x, ctx)
+        v = layers.linear_apply(p["v"], x, ctx)
+    q = q.reshape(b, t, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, cfg.hd)
     angles = layers.rope_angles(positions, cfg.hd, cfg.rope_theta)
     q = layers.apply_rope(q, angles, cfg.rope_style)
     k = layers.apply_rope(k, angles, cfg.rope_style)
@@ -216,6 +277,53 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             v.transpose(0, 2, 1, 3), causal=True, window=cfg.swa_window,
             impl=ctx.attn_impl, q_chunk=ctx.attn_q_chunk,
             kv_chunk=ctx.attn_kv_chunk)
+    elif phase == "chunk":
+        # batched chunked in-place prefill (continuous-batching admission):
+        # every row b with chunk_mask[b] writes its chunk's KV into its OWN
+        # cache row at per-row offset cache_len[b] and attends the row's
+        # already-written [0, offset[b]) prefix.  Masked rows (lanes that
+        # are decoding or idle this wave) leave their cache row untouched
+        # and produce don't-care outputs — one dispatch advances every
+        # pending admission.  The chunk's own K/V stay fresh (not round-
+        # tripped through the cache dtype) so within-chunk numerics match
+        # monolithic prefill.
+        offsets = cache_len  # (b,) per-row admission offsets
+        admit = chunk_mask   # (b,) bool: row is admitting this wave
+
+        def write_row(row_c, new, off, m):
+            cur = jax.lax.dynamic_slice_in_dim(row_c, off, t, axis=0)
+            upd = jnp.where(m, new.astype(row_c.dtype), cur)
+            return jax.lax.dynamic_update_slice_in_dim(row_c, upd, off,
+                                                       axis=0)
+
+        def overlay_row(row_c, new, off):
+            return jax.lax.dynamic_update_slice_in_dim(
+                row_c, new.astype(row_c.dtype), off, axis=0)
+
+        if quantized:
+            kq, ks = q_kv(k)
+            vq, vs = q_kv(v)
+            kc = jax.vmap(write_row)(cache["k"], kq, offsets, admit)
+            vc = jax.vmap(write_row)(cache["v"], vq, offsets, admit)
+            ks_c = jax.vmap(write_row)(cache["k_scale"], ks, offsets, admit)
+            vs_c = jax.vmap(write_row)(cache["v_scale"], vs, offsets, admit)
+            new_cache = {"k": kc, "v": vc, "k_scale": ks_c, "v_scale": vs_c}
+            k_read = kc.astype(k.dtype) * ks_c[..., None].astype(k.dtype)
+            v_read = vc.astype(v.dtype) * vs_c[..., None].astype(v.dtype)
+        else:
+            kc = jax.vmap(write_row)(cache["k"], k, offsets, admit)
+            vc = jax.vmap(write_row)(cache["v"], v, offsets, admit)
+            new_cache = {"k": kc, "v": vc}
+            k_read = kc.astype(k.dtype)
+            v_read = vc.astype(v.dtype)
+        # overlay each row's chunk span with the fresh full-precision values
+        # (masked rows' attention outputs are don't-care)
+        k_read = jax.vmap(overlay_row)(k_read, k, offsets)
+        v_read = jax.vmap(overlay_row)(v_read, v, offsets)
+        o = attention.chunk_prefill_attention(
+            q.transpose(0, 2, 1, 3), k_read.transpose(0, 2, 1, 3),
+            v_read.transpose(0, 2, 1, 3), offsets, window=cfg.swa_window,
+            impl="pallas" if ctx.attn_impl == "pallas" else "xla")
     else:  # decode step: t == 1
         if quantized:
             kq, ks = q_kv(k)
@@ -258,7 +366,8 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
 
 def _block_apply(cfg: ModelConfig, ctx: Ctx, x: jax.Array, p: dict,
                  cache: Optional[dict], positions: jax.Array, phase: str,
-                 cache_len) -> Tuple[jax.Array, Optional[dict]]:
+                 cache_len,
+                 chunk_mask=None) -> Tuple[jax.Array, Optional[dict]]:
     new_cache = {}
     if cfg.block_kind == "xlstm_pair":
         want_state = cache is not None
@@ -298,7 +407,8 @@ def _block_apply(cfg: ModelConfig, ctx: Ctx, x: jax.Array, p: dict,
         attn_cache = {k_: cache[k_] for k_ in
                       ("k", "v", "k_scale", "v_scale") if k_ in cache}
     attn_out, kv_cache = _attn_apply(cfg, ctx, p["attn"], h, attn_cache,
-                                     positions, phase, cache_len)
+                                     positions, phase, cache_len,
+                                     chunk_mask)
     if kv_cache is not None:
         new_cache.update(kv_cache)
     if cfg.block_kind == "hymba":
@@ -359,12 +469,13 @@ def _lm_head(cfg: ModelConfig, params: dict, x: jax.Array,
 
 def _run_layers(cfg: ModelConfig, ctx: Ctx, params: dict, x: jax.Array,
                 cache: Optional[dict], positions: jax.Array, phase: str,
-                cache_len, remat: bool = True):
+                cache_len, remat: bool = True, chunk_mask=None):
     def body(carry, xs):
         layer_p, layer_cache = xs
         carry = ctx.c(carry, "residual")  # SP/TP layout between blocks
         y, new_cache = _block_apply(cfg, ctx, carry, layer_p, layer_cache,
-                                    positions, phase, cache_len)
+                                    positions, phase, cache_len,
+                                    chunk_mask)
         return y, new_cache
 
     if remat:
@@ -449,6 +560,53 @@ def prefill_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
         idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
         last = jnp.take_along_axis(
             x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = _lm_head(cfg, params, last, ctx)
+    return logits[:, 0], new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
+                  cache: dict, *, offsets, admit_mask, last_index):
+    """One admission *wave* of a continuous batch -> (logits (b, vocab), cache).
+
+    ``inputs`` is (b, C) — one prompt chunk per shared-cache row, where b is
+    the cache's batch (slot count).  Row i with ``admit_mask[i]`` sits at
+    absolute positions ``[offsets[i], offsets[i] + C)`` of its own cache
+    row: its chunk KV is written *in place* at that offset and the chunk
+    attends to the row's already-written ``[0, offsets[i])`` prefix plus its
+    own causal triangle.  Masked rows leave their cache row untouched and
+    produce don't-care logits — one dispatch advances every in-progress
+    admission without disturbing decoding lanes.
+
+    ``offsets``/``admit_mask``/``last_index`` are traced (b,) vectors, so
+    ONE compiled shape (fixed C) serves every mix of prompt lengths and
+    offsets — the O(1)-jit-cache property the serving engine's chunked
+    admission relies on.
+
+    ``last_index[i]`` is the chunk-local index of row i's last real prompt
+    token; its logits are returned (only meaningful on a row's final
+    chunk).  A right-padded final chunk is safe for the same reason padded
+    prefill is: causality keeps real positions from attending the padded
+    tail, and the tail's cache entries sit at positions >= the request's
+    live length.
+
+    Requires attention blocks — recurrent kinds (SSM/xLSTM) integrate every
+    input token into their state, which cannot be resumed chunk-to-chunk
+    without carrying the state; the engine prefills those at full length.
+    """
+    if cfg.block_kind != "attn":
+        raise NotImplementedError(
+            "chunked prefill requires block_kind='attn' "
+            f"(got {cfg.block_kind!r})")
+    x = _embed_in(cfg, params, inputs, ctx)
+    b, c = inputs.shape[0], x.shape[1]
+    offsets = jnp.asarray(offsets, jnp.int32)
+    admit = jnp.asarray(admit_mask, jnp.bool_)
+    positions = offsets[:, None] + jnp.arange(c)[None, :]  # (b, C)
+    x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "chunk",
+                               offsets, remat=False, chunk_mask=admit)
+    idx = jnp.asarray(last_index, jnp.int32)[:, None, None]
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[2])), axis=1)
     logits = _lm_head(cfg, params, last, ctx)
     return logits[:, 0], new_cache
 

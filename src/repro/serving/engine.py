@@ -1,43 +1,59 @@
-"""Serving engine: token-level continuous batching over packed ternary params.
+"""Serving engine: device-resident decode hot loop + chunked in-place prefill.
 
 The paper's system-level claim — prefill and decode are different machines
-and both must be first-class — is the organizing principle here, upgraded
-from slot-level to token-level admission:
+and both must be first-class, *overlapped* rather than serialized (§3.4
+streaming dataflow) — is the organizing principle.  PR 1's token-level
+continuous batching paid one jit dispatch + full host sync per decoded token
+and froze every in-flight lane while a whole prompt prefilled; this engine
+keeps the whole serving tick on device:
 
-  * prefill path: per-request fused attention (compute-bound) over the
-    prompt, bucketed to ``prefill_bucket`` lengths so the jit cache stays
-    small; emits the request's KV prefix + first token;
-  * decode path: one batched single-token step per tick against the shared
-    slot cache (bandwidth-bound on cache + packed weight streams), with a
-    **per-slot length vector** — every slot writes its KV at its own live
-    offset, rotates by its own position, and attends only its own
-    [0, cache_len[i]] prefix (padded/stale cache positions are never
-    attended);
-  * batching: a fixed array of decode slots over one shared KV cache.  The
-    moment a slot finishes (max_new_tokens reached or cache exhausted) it is
-    freed and the next queued request is prefilled *into that slot
-    mid-flight* — the other slots never stop decoding.
+  * **fused multi-tick decode** — ``_decode_block`` is one jit'd
+    ``lax.scan`` over ``decode_block`` single-token ticks.  Per-slot
+    sampling (greedy + temperature via per-request PRNG keys), KV-cache
+    writes, ``cache_len``/``emitted`` bookkeeping and done-masking all stay
+    on device; the host gets back a ``(slots, decode_block)`` token block
+    plus emit masks once per block instead of once per token.  The packed
+    ternary weights are pre-decoded once per block, outside the scan
+    (``transformer.predecode_packed``), amortizing the base-3 unpack over
+    the block's ticks — the software analogue of the paper's decode
+    bandwidth argument (batch tokens against one pass over the weight
+    stream).  Lanes that finish mid-block emit pad tokens (0) under the
+    mask so the scan shape stays static; their cache writes are parked at
+    the row tail (position ``max_seq - 1``), which is either masked by the
+    live length or overwritten before it is ever attended.
+  * **chunked in-place prefill, batched across slots** — admission runs
+    ``prefill_chunk``-sized *wave* dispatches (``transformer.prefill_chunk``)
+    in which EVERY pending admission writes its chunk's KV straight into its
+    own shared-cache row at its own offset (masked rows untouched) and
+    attends its already-written ``[0, offset)`` prefix.  Chunk size is the
+    only shape involved, so the prefill jit cache holds exactly one entry
+    for any mix of prompt lengths (PR 1 compiled one program per
+    prompt-length bucket and copied a donor cache per admission).
+  * **bounded interleaving** — the host loop alternates one admission wave
+    with one decode block, so admissions — however many, however long —
+    never stall in-flight lanes for more than one chunk + one block
+    dispatch (``stats["max_chunks_between_decode_blocks"]`` records the
+    bound).
 
 Slot state machine (host side, one ``_Slot`` per decode lane):
 
-    FREE --admit(prefill + adopt-into-slot + first token)--> ACTIVE
-    ACTIVE --decode tick (emitted += 1, cache_len += 1)--> ACTIVE
+    FREE --admit(chunk*, first token sampled on device)--> ACTIVE
+    ACTIVE --decode block (emitted += k, cache_len += k)--> ACTIVE
     ACTIVE --emitted == max_new_tokens or cache_len == max_seq--> FREE
 
-Device state is two jit'd programs + one adopter:
+Sampling is reproducible per request: each slot's PRNG key is
+``fold_in(PRNGKey(request.seed), emitted_index)``, so a request's output
+depends only on its seed and its own logits — never on which slot or tick
+order the scheduler happened to pick.  ``request.seed`` defaults to a
+deterministic function of the engine seed and submission index.
 
-  * ``_prefill_one(params, tokens(1, Lb), cache, lengths(1,))`` — compiled
-    once per prompt-length bucket Lb; right-padded, logits gathered at the
-    last *real* token via ``prefill_step(..., lengths=...)``;
-  * ``_adopt(cache, one_cache, slot)`` — writes the batch-1 prefilled cache
-    into batch row ``slot`` of the shared cache (donated, so it is an
-    in-place scatter on the device buffer);
-  * ``_decode(params, tokens(b, 1), cache, cache_len(b,))`` — compiled once;
-    the length vector makes the step ragged-correct for any mix of slots.
+Recurrent kinds (SSM / xLSTM) cannot resume prefill chunk-to-chunk (their
+state integrates every token), so they fall back to PR 1's whole-prompt
+donor prefill + adopt — the fused decode block works for them unchanged.
 
-Greedy sampling by default; per-request temperature optional.  Per-request
-TTFT (admission wait + prefill) and aggregate throughput are recorded on the
-requests / ``engine.stats``.
+``engine.stats`` reports aggregate *and* decode-only throughput
+(``decode_tokens / decode_wall_s``), TTFT p50/p95, and admission /
+interleave counters.
 """
 
 from __future__ import annotations
@@ -56,12 +72,16 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.models.layers import Ctx
 
+_SEED_MOD = 2 ** 31 - 1
+
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int = 16
     temperature: float = 0.0           # 0 = greedy
+    seed: Optional[int] = None         # sampling seed; engine assigns a
+    #                                    deterministic default if None
     # filled by the engine:
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None     # time to first token (incl. queueing)
@@ -96,154 +116,329 @@ class _Slot:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, packed_params, *, max_seq: int,
                  batch_slots: int = 4, ctx: Optional[Ctx] = None,
-                 seed: int = 0, prefill_bucket: int = 16,
-                 cache_dtype=jnp.bfloat16):
+                 seed: int = 0, prefill_chunk: int = 32,
+                 decode_block: int = 8, cache_dtype=jnp.bfloat16):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
         self.slots = batch_slots
-        self.prefill_bucket = max(1, prefill_bucket)
+        self.decode_block = max(1, decode_block)
+        # any chunk size <= max_seq works: a final chunk that would run past
+        # the end of its cache row is shifted back to end exactly at
+        # max_seq (its leading overlap rewrites positions the previous
+        # chunk already covered — same tokens, same absolute positions)
+        self.prefill_chunk = max(1, min(prefill_chunk, max_seq))
+        self._chunked = cfg.block_kind == "attn"
         self.cache_dtype = cache_dtype
         self.ctx = ctx or Ctx(mode="packed", group_size=cfg.group_size,
                               attn_q_chunk=128, attn_kv_chunk=128)
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed
         self.stats: dict = {}
 
         cfg_, ctx_ = self.cfg, self.ctx
+        max_seq_, block_ = self.max_seq, self.decode_block
 
+        def _sample(logits, seeds, emitted, temps):
+            """Per-slot sampling: greedy, or categorical keyed by
+            fold_in(PRNGKey(request seed), emitted-token index) — the output
+            depends only on the request, never on slot or tick order.  The
+            PRNG work is skipped entirely (lax.cond) when the whole batch is
+            greedy."""
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            def with_temperature(_):
+                def one(seed, idx, row, t):
+                    key = jax.random.fold_in(jax.random.PRNGKey(seed), idx)
+                    return jax.random.categorical(
+                        key, row.astype(jnp.float32) / jnp.maximum(t, 1e-6))
+                sampled = jax.vmap(one)(seeds, emitted, logits,
+                                        temps).astype(jnp.int32)
+                return jnp.where(temps > 0.0, sampled, greedy)
+
+            return jax.lax.cond(jnp.any(temps > 0.0), with_temperature,
+                                lambda _: greedy, None)
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def _prefill_chunks(params, tokens, cache, offsets, admit_mask,
+                            last_idx, seeds, temps):
+            """One admission wave: a (slots, C) chunk batch written in place
+            at per-row offsets; rows not admitting are masked.  First tokens
+            for rows whose prompt ends in this chunk are sampled on device
+            (emitted index 0).  Weights are pre-decoded once per wave (exact
+            f32-GEMM path), like the decode block."""
+            params = transformer.predecode_packed(cfg_, params)
+            logits, cache = transformer.prefill_chunk(
+                cfg_, params, tokens, ctx_, cache, offsets=offsets,
+                admit_mask=admit_mask, last_index=last_idx)
+            first = _sample(logits, seeds, jnp.zeros_like(seeds), temps)
+            return first, cache
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def _decode_block(params, tokens, cache, cache_len, emitted, max_new,
+                          active, temps, seeds):
+            """Fused multi-tick decode: scan `decode_block` ticks on device.
+
+            The packed ternary weights are pre-decoded ONCE here, outside
+            the scan, so the base-3 unpack is amortized over the block's
+            ticks (the paper's decode-bandwidth argument in software: batch
+            tokens against one pass over the weight stream) — bit-identical
+            outputs to the packed path.
+
+            Finished lanes keep ticking under a mask (static scan shape):
+            they emit pad token 0, their bookkeeping freezes, and their KV
+            write is parked at the row tail where it is never attended
+            before being overwritten.
+            """
+            params = transformer.predecode_packed(cfg_, params)
+
+            def tick(carry, _):
+                tokens, cache, cache_len, emitted, active = carry
+                # park inactive lanes' cache write at the row tail (clamped
+                # to max_seq - 1): positions >= the lane's live length are
+                # masked out of attention, and an active lane overwrites the
+                # tail before its mask ever reaches it
+                step_len = jnp.where(active, cache_len, max_seq_)
+                logits, cache = transformer.decode_step(
+                    cfg_, params, tokens[:, None], ctx_, cache, step_len)
+                nxt = _sample(logits, seeds, emitted, temps)
+                out = jnp.where(active, nxt, 0)
+                tokens = jnp.where(active, nxt, tokens)
+                cache_len = jnp.where(active, cache_len + 1, cache_len)
+                emitted = jnp.where(active, emitted + 1, emitted)
+                done = jnp.logical_or(emitted >= max_new,
+                                      cache_len >= max_seq_)
+                new_active = jnp.logical_and(active, jnp.logical_not(done))
+                return ((tokens, cache, cache_len, emitted, new_active),
+                        (out, active))
+
+            carry = (tokens, cache, cache_len, emitted, active)
+            (tokens, cache, cache_len, emitted, active), (blk, mask) = \
+                jax.lax.scan(tick, carry, None, length=block_)
+            return blk.T, mask.T, cache  # (slots, decode_block) each
+
+        # legacy whole-prompt admission (recurrent kinds: SSM/xLSTM state
+        # cannot resume chunk-to-chunk) — donor prefill + adopt, PR 1 style
         @jax.jit
-        def _prefill_one(params, tokens, cache, lengths):
-            return transformer.prefill_step(cfg_, params, tokens, ctx_, cache,
-                                            lengths=lengths)
+        def _prefill_full(params, tokens, cache, lengths):
+            return transformer.prefill_step(cfg_, params, tokens, ctx_,
+                                            cache, lengths=lengths)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
         def _adopt(cache, one_cache, slot):
-            # every cache leaf is (layers, batch, ...); the donor's batch is
-            # 1 and its seq extent (when the leaf has one) may be shorter
-            # than the shared cache's max_seq — write only the donor prefix
-            # into batch row `slot` so admission traffic scales with the
-            # prompt bucket, not max_seq
             def write(full, new):
                 start = (0, slot) + (0,) * (full.ndim - 2)
                 return jax.lax.dynamic_update_slice(
                     full, new.astype(full.dtype), start)
             return jax.tree_util.tree_map(write, cache, one_cache)
 
-        @functools.partial(jax.jit, donate_argnums=(2,))
-        def _decode(params, tokens, cache, cache_len):
-            return transformer.decode_step(cfg_, params, tokens, ctx_, cache,
-                                           cache_len)
-
-        self._prefill_one = _prefill_one
+        self._sample_tokens = jax.jit(_sample)
+        self._prefill_chunks = _prefill_chunks
+        self._decode_block = _decode_block
+        self._prefill_full = _prefill_full
         self._adopt = _adopt
-        self._decode = _decode
 
-    # -- sampling ----------------------------------------------------------
+    def compiled_shapes(self) -> dict:
+        """Live jit-cache entry counts (the O(1)-compile invariant).
 
-    def _sample(self, logits: jax.Array, temps: List[float]) -> np.ndarray:
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))
-        if all(t <= 0.0 for t in temps):
-            return greedy
-        self.key, sub = jax.random.split(self.key)
-        t = jnp.maximum(jnp.asarray(temps, jnp.float32), 1e-6)[:, None]
-        sampled = np.asarray(jax.random.categorical(
-            sub, logits.astype(jnp.float32) / t, axis=-1))
-        return np.where(np.asarray(temps) > 0.0, sampled, greedy)
+        Values are None when the private jit cache introspection is
+        unavailable (it is not public JAX API and has drifted before)."""
+        def size(fn):
+            try:
+                return fn._cache_size()
+            except AttributeError:
+                return None
+        return {"prefill_chunk": size(self._prefill_chunks),
+                "decode_block": size(self._decode_block)}
 
-    # -- admission (prefill into a freed slot) -----------------------------
+    # -- admission (chunked, in-place, batched across slots) ---------------
 
-    def _bucket(self, plen: int) -> int:
-        if self.cfg.block_kind != "attn":
-            # recurrent state (SSM / xLSTM) integrates every input token, so
-            # right-padding would pollute it — prefill at the exact length
-            return plen
-        b = self.prefill_bucket
-        return min(self.max_seq, ((plen + b - 1) // b) * b)
-
-    def _admit(self, cache, slot_idx: int, slot: _Slot, req: Request,
-               t_submit: float):
+    def _start_admission(self, slot_idx: int, req: Request) -> dict:
         plen = len(req.prompt)  # <= max_seq, validated up front in run()
-        lb = self._bucket(plen)
-        toks = np.zeros((1, lb), np.int32)
-        toks[0, :plen] = req.prompt
-        # bucket-length donor cache: prefill fills exactly [0, lb) and
-        # _adopt writes only that prefix into the shared cache
-        one_cache = transformer.init_cache(self.cfg, 1, lb, self.cache_dtype)
-        logits, one_cache = self._prefill_one(
-            self.params, jnp.asarray(toks), one_cache,
-            jnp.asarray([plen], jnp.int32))
-        tok = int(self._sample(logits, [req.temperature])[0])
-        req.ttft_s = time.perf_counter() - t_submit
-        cache = self._adopt(cache, one_cache,
-                            jnp.asarray(slot_idx, jnp.int32))
-        slot.request = req
-        slot.tokens = [tok]
-        slot.cache_len = plen
-        slot.last_token = tok
-        self.stats["admissions"] = self.stats.get("admissions", 0) + 1
+        if self._chunked:
+            n_chunks = -(-plen // self.prefill_chunk)
+        else:
+            n_chunks = 1
+        return {"slot": slot_idx, "req": req, "plen": plen, "next": 0,
+                "n_chunks": n_chunks}
+
+    def _first_token(self, logits, req: Request) -> int:
+        return int(np.asarray(self._sample_tokens(
+            logits, jnp.asarray([req.seed], jnp.int32),
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([req.temperature], jnp.float32)))[0])
+
+    def _finish_admission(self, slots, admit, tok: int, t0: float):
+        req, i = admit["req"], admit["slot"]
+        req.ttft_s = time.perf_counter() - t0
+        s = slots[i]
+        s.request = req
+        s.tokens = [tok]
+        s.cache_len = admit["plen"]
+        s.last_token = tok
+        self.stats["admissions"] += 1
+        # request finished at prefill (max_new == 1 or full cache)
+        if len(s.tokens) >= req.max_new_tokens or s.cache_len >= self.max_seq:
+            s.free()
+
+    def _prefill_wave(self, cache, pending, slots, t0: float):
+        """Dispatch one admission wave: advance EVERY pending admission by
+        one chunk in a single batched jit call (rows of lanes that are
+        decoding or idle are masked).  In-flight lanes therefore stall for
+        at most this one dispatch between decode blocks, no matter how many
+        prompts are being admitted or how long they are."""
+        self.stats["prefill_chunks"] += 1
+        if not self._chunked:  # recurrent: whole prompt, donor + adopt,
+            i = next(iter(pending))  # one admission per wave
+            admit = pending.pop(i)
+            req, plen = admit["req"], admit["plen"]
+            toks = np.asarray(req.prompt, np.int32)[None]
+            one_cache = transformer.init_cache(self.cfg, 1, plen,
+                                               self.cache_dtype)
+            logits, one_cache = self._prefill_full(
+                self.params, jnp.asarray(toks), one_cache,
+                jnp.asarray([plen], jnp.int32))
+            tok = self._first_token(logits, req)
+            cache = self._adopt(cache, one_cache, jnp.asarray(i, jnp.int32))
+            self._finish_admission(slots, admit, tok, t0)
+            return cache
+        n, c = self.slots, self.prefill_chunk
+        toks = np.zeros((n, c), np.int32)
+        offs = np.zeros((n,), np.int32)
+        mask = np.zeros((n,), bool)
+        last = np.zeros((n,), np.int32)
+        seeds = np.zeros((n,), np.int32)
+        temps = np.zeros((n,), np.float32)
+        completing = []
+        for i, admit in pending.items():
+            req, plen = admit["req"], admit["plen"]
+            # shifted final chunk: never write past the cache row end
+            lo = min(admit["next"] * c, self.max_seq - c)
+            seg = req.prompt[lo:lo + c]
+            toks[i, :len(seg)] = seg
+            offs[i] = lo
+            mask[i] = True
+            last[i] = max(0, min(plen - 1 - lo, c - 1))
+            seeds[i] = req.seed
+            temps[i] = req.temperature
+            admit["next"] += 1
+            if admit["next"] >= admit["n_chunks"]:
+                completing.append(i)
+        first, cache = self._prefill_chunks(
+            self.params, jnp.asarray(toks), cache, jnp.asarray(offs),
+            jnp.asarray(mask), jnp.asarray(last), jnp.asarray(seeds),
+            jnp.asarray(temps))
+        if completing:
+            ft = np.asarray(first)  # sync only when an admission completes
+            for i in completing:
+                self._finish_admission(slots, pending.pop(i), int(ft[i]), t0)
+        return cache
+
+    # -- decode (fused multi-tick block) -----------------------------------
+
+    def _run_decode_block(self, cache, slots):
+        t_blk = time.perf_counter()
+        reqs = [s.request for s in slots]
+        blk, mask, cache = self._decode_block(
+            self.params,
+            jnp.asarray([s.last_token for s in slots], jnp.int32),
+            cache,
+            jnp.asarray([s.cache_len for s in slots], jnp.int32),
+            jnp.asarray([len(s.tokens) for s in slots], jnp.int32),
+            jnp.asarray([r.max_new_tokens if r else 0 for r in reqs],
+                        jnp.int32),
+            jnp.asarray([s.active for s in slots], jnp.bool_),
+            jnp.asarray([r.temperature if r else 0.0 for r in reqs],
+                        jnp.float32),
+            jnp.asarray([r.seed if r else 0 for r in reqs], jnp.int32))
+        blk = np.asarray(blk)    # the block's single host sync
+        mask = np.asarray(mask)
+        st = self.stats
+        st["decode_blocks"] += 1
+        st["decode_steps"] += self.decode_block
+        st["decode_tokens"] += int(mask.sum())
+        for i, s in enumerate(slots):
+            if not s.active:
+                continue
+            new = blk[i][mask[i]].tolist()
+            s.tokens.extend(int(t) for t in new)
+            s.cache_len += len(new)
+            if new:
+                s.last_token = int(new[-1])
+            if (len(s.tokens) >= s.request.max_new_tokens
+                    or s.cache_len >= self.max_seq):
+                s.free()
+        st["decode_wall_s"] += time.perf_counter() - t_blk
         return cache
 
     # -- main loop ---------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve all requests with token-level continuous batching."""
+        """Serve all requests: chunked admission interleaved with fused
+        decode blocks (token-level continuous batching)."""
         t0 = time.perf_counter()
-        self.stats = {"admissions": 0, "decode_steps": 0,
-                      "mid_flight_admissions": 0}
-        for r in requests:  # validate up front: a bad request must not
-            if len(r.prompt) > self.max_seq:  # abandon in-flight work
-                raise ValueError(
+        self.stats = {"admissions": 0, "mid_flight_admissions": 0,
+                      "prefill_chunks": 0, "decode_steps": 0,
+                      "decode_blocks": 0, "decode_tokens": 0,
+                      "decode_wall_s": 0.0,
+                      "max_chunks_between_decode_blocks": 0}
+        for k, r in enumerate(requests):  # validate up front: a bad request
+            if len(r.prompt) > self.max_seq:  # must not abandon in-flight
+                raise ValueError(               # work
                     f"prompt length {len(r.prompt)} > max_seq "
                     f"{self.max_seq}")
+            if len(r.prompt) < 1:
+                raise ValueError("prompt must have at least one token")
+            if r.max_new_tokens < 1:  # prefill always emits a first token
+                raise ValueError("max_new_tokens must be >= 1")
+            # deterministic per-request default; normalize to int32 range
+            r.seed = ((self.seed * 1000003 + k) if r.seed is None
+                      else int(r.seed)) % _SEED_MOD
         queue = deque(requests)
         slots = [_Slot() for _ in range(self.slots)]
         cache = transformer.init_cache(self.cfg, self.slots, self.max_seq,
                                        self.cache_dtype)
-        while queue or any(s.active for s in slots):
-            # refill every free slot from the queue (token-level admission:
-            # this happens between decode ticks, while other slots hold
-            # their live state in the shared cache)
-            # mid-flight = a refill while slots that were already decoding
-            # stay live; snapshot before the pass so neither the initial
-            # fill nor same-tick wave refills count
-            was_active = (self.stats["decode_steps"] > 0
-                          and any(s.active for s in slots))
+        pending: dict = {}  # slot index -> in-progress admission
+        chunks_since_block = 0
+        while queue or pending or any(s.active for s in slots):
+            # wave-assign every free slot a queued request; all pending
+            # admissions advance together, one chunk per wave dispatch.
+            # mid-flight = an admission that starts while other lanes are
+            # live decoding.
             for i, s in enumerate(slots):
-                if s.active or not queue:
-                    continue
-                cache = self._admit(cache, i, s, queue.popleft(), t0)
-                if was_active:
-                    self.stats["mid_flight_admissions"] += 1
-                # request finished at prefill (max_new==1 or full cache)
-                if (len(s.tokens) >= s.request.max_new_tokens
-                        or s.cache_len >= self.max_seq):
-                    s.free()
-            active = [s for s in slots if s.active]
-            if not active:
-                continue  # queue may still hold work for the freed slots
-            toks = np.asarray([[s.last_token] for s in slots], np.int32)
-            lens = np.asarray([s.cache_len for s in slots], np.int32)
-            logits, cache = self._decode(self.params, jnp.asarray(toks),
-                                         cache, jnp.asarray(lens))
-            temps = [s.request.temperature if s.active else 0.0
-                     for s in slots]
-            cur = self._sample(logits, temps)
-            self.stats["decode_steps"] += 1
-            for s, tok in zip(slots, cur):
-                if not s.active:
-                    continue
-                s.tokens.append(int(tok))
-                s.last_token = int(tok)
-                s.cache_len += 1
-                if (len(s.tokens) >= s.request.max_new_tokens
-                        or s.cache_len >= self.max_seq):
-                    s.free()
+                if not queue:
+                    break
+                if not s.active and i not in pending:
+                    pending[i] = self._start_admission(i, queue.popleft())
+                    if any(o.active for o in slots):
+                        self.stats["mid_flight_admissions"] += 1
+            # one batched prefill wave — in-flight lanes stall for at most
+            # this one dispatch before the next decode block runs
+            if pending:
+                others_active = any(s.active for s in slots)
+                cache = self._prefill_wave(cache, pending, slots, t0)
+                if others_active:
+                    chunks_since_block += 1
+                    self.stats["max_chunks_between_decode_blocks"] = max(
+                        self.stats["max_chunks_between_decode_blocks"],
+                        chunks_since_block)
+            # one fused decode block for every live lane
+            if any(s.active for s in slots):
+                cache = self._run_decode_block(cache, slots)
+                chunks_since_block = 0
         wall = time.perf_counter() - t0
         total = sum(len(r.output) for r in requests)
-        self.stats.update({
+        ttfts = [r.ttft_s for r in requests]
+        st = self.stats
+        st.update({
             "wall_s": wall,
             "total_new_tokens": total,
             "tokens_per_s": total / wall if wall > 0 else float("inf"),
-            "ttft_s": [r.ttft_s for r in requests],
+            "decode_tok_s": (st["decode_tokens"] / st["decode_wall_s"]
+                             if st["decode_wall_s"] > 0 else float("inf")),
+            "ttft_s": ttfts,
+            "ttft_p50_s": (float(np.percentile(ttfts, 50)) if ttfts
+                           else None),
+            "ttft_p95_s": (float(np.percentile(ttfts, 95)) if ttfts
+                           else None),
         })
         return requests

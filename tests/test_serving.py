@@ -117,6 +117,154 @@ def test_prompt_longer_than_max_seq_rejected(served_model):
     eng = ServingEngine(cfg, packed, max_seq=8, batch_slots=1, ctx=ctx)
     with pytest.raises(ValueError, match="max_seq"):
         eng.run([Request(prompt=np.arange(9, dtype=np.int32))])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.run([Request(prompt=np.arange(3, dtype=np.int32),
+                         max_new_tokens=0)])
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-tick decode + chunked in-place prefill (device-resident loop)
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(vocab):
+    prompts = [np.asarray([1, 2, 3, 4, 5], np.int32),
+               np.asarray([9, 8, 7], np.int32),
+               np.asarray([4, 4, 2, 1, 1, 3, 2, 5, 6, 1, 7, 2, 3], np.int32),
+               np.asarray([5, 1], np.int32)]
+    news = [6, 3, 7, 5]
+    return prompts, [Request(prompt=p, max_new_tokens=n)
+                     for p, n in zip(prompts, news)]
+
+
+def test_fused_block_matches_single_tick_and_unbatched(served_model):
+    """Chunked prefill + fused-scan greedy decode is token-identical to the
+    single-tick whole-prompt configuration (PR-1 semantics: decode_block=1,
+    one prefill call per prompt) and to the unbatched oracle."""
+    cfg, packed, ctx = served_model
+    max_seq = 32
+    prompts, reqs_fused = _mixed_requests(cfg.vocab_size)
+    eng_fused = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3,
+                              ctx=ctx, prefill_chunk=4, decode_block=8)
+    eng_fused.run(reqs_fused)
+    _, reqs_tick = _mixed_requests(cfg.vocab_size)
+    eng_tick = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3,
+                             ctx=ctx, prefill_chunk=max_seq, decode_block=1)
+    eng_tick.run(reqs_tick)
+    for rf, rt, p in zip(reqs_fused, reqs_tick, prompts):
+        ref = reference_decode(cfg, packed, ctx, p, rf.max_new_tokens,
+                               max_seq)
+        np.testing.assert_array_equal(rf.output, np.asarray(ref, np.int32))
+        np.testing.assert_array_equal(rt.output, rf.output)
+
+
+def test_chunked_prefill_compiles_o1_shapes(served_model):
+    """10 distinct prompt lengths hit ONE compiled prefill program (the
+    PR-1 engine compiled one per length bucket) and one decode program."""
+    cfg, packed, ctx = served_model
+    eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                        prefill_chunk=4, decode_block=4)
+    reqs = [Request(prompt=np.arange(1, plen + 1, dtype=np.int32) % 32,
+                    max_new_tokens=2) for plen in range(3, 13)]
+    eng.run(reqs)
+    assert len({len(r.prompt) for r in reqs}) == 10
+    shapes = eng.compiled_shapes()
+    if shapes["prefill_chunk"] is None:
+        pytest.skip("jit cache introspection unavailable on this jax")
+    assert shapes["prefill_chunk"] == 1
+    assert shapes["decode_block"] == 1
+
+
+def test_long_prompt_interleaves_with_decode(served_model):
+    """A long prompt admitted mid-flight stalls in-flight lanes for at most
+    one prefill chunk between consecutive decode blocks."""
+    cfg, packed, ctx = served_model
+    eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                        prefill_chunk=4, decode_block=4)
+    first = Request(prompt=np.asarray([3, 1, 4], np.int32),
+                    max_new_tokens=24)              # stays in flight
+    short = Request(prompt=np.asarray([7, 2], np.int32),
+                    max_new_tokens=2)               # frees its slot fast
+    long_ = Request(prompt=np.arange(1, 21, dtype=np.int32),  # 5 chunks,
+                    max_new_tokens=4)               # admitted mid-flight
+    eng.run([first, short, long_])
+    st = eng.stats
+    assert st["mid_flight_admissions"] >= 1
+    assert st["prefill_chunks"] >= 6  # 1 wave (first+short) + 5 (long_)
+    # the interleave bound: never more than one admission wave between
+    # decode blocks, no matter how long the admitted prompt is
+    assert st["max_chunks_between_decode_blocks"] == 1
+    # and the outputs are still exact
+    for r in (first, short, long_):
+        ref = reference_decode(cfg, packed, ctx, r.prompt, r.max_new_tokens,
+                               32)
+        np.testing.assert_array_equal(r.output, np.asarray(ref, np.int32))
+
+
+def test_shifted_final_chunk_non_divisible_chunk_size(served_model):
+    """A chunk size that does not divide max_seq works: the final chunk is
+    shifted back to end exactly at the cache row end, and greedy outputs
+    still match the unbatched oracle."""
+    cfg, packed, ctx = served_model
+    max_seq = 30                       # 30 % 7 != 0
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=2, ctx=ctx,
+                        prefill_chunk=7, decode_block=4)
+    assert eng.prefill_chunk == 7
+    prompts = [np.arange(2, 27, dtype=np.int32) % 32,   # 25 toks: 4 chunks,
+               np.asarray([5, 3, 1], np.int32)]         # last one shifted
+    reqs = [Request(prompt=p, max_new_tokens=4) for p in prompts]
+    eng.run(reqs)
+    for r, p in zip(reqs, prompts):
+        ref = reference_decode(cfg, packed, ctx, p, 4, max_seq)
+        np.testing.assert_array_equal(r.output, np.asarray(ref, np.int32))
+
+
+def test_sampling_reproducible_across_slots_and_schedules(served_model):
+    """A sampled request's output depends only on its seed (keys are
+    fold_in(PRNGKey(seed), emitted index)), not on which slot or tick
+    schedule the scheduler picked."""
+    cfg, packed, ctx = served_model
+
+    def probe():
+        return Request(prompt=np.asarray([2, 7, 1, 8], np.int32),
+                       max_new_tokens=8, temperature=0.9, seed=123)
+
+    def filler(n):
+        return Request(prompt=np.asarray([5, 3, 1], np.int32) * n % 32,
+                       max_new_tokens=n + 3)
+
+    eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                        prefill_chunk=4, decode_block=4)
+    a = probe()
+    eng.run([a, filler(1), filler(2)])        # probe admitted first (slot 0)
+    eng2 = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                         prefill_chunk=4, decode_block=4, seed=99)
+    b = probe()
+    eng2.run([filler(1), filler(2), b])       # probe admitted last (refill)
+    np.testing.assert_array_equal(a.output, b.output)
+    # a different seed decodes a different trajectory (temperature > 0)
+    eng3 = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                         prefill_chunk=4, decode_block=4)
+    c = probe()
+    c.seed = 124
+    eng3.run([c])
+    assert not np.array_equal(a.output, c.output)
+
+
+def test_stats_decode_only_throughput_and_ttft_percentiles(served_model):
+    cfg, packed, ctx = served_model
+    eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=2, ctx=ctx,
+                        prefill_chunk=4, decode_block=4)
+    reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32) * (i + 1) % 32,
+                    max_new_tokens=5) for i in range(4)]
+    eng.run(reqs)
+    st = eng.stats
+    # decode-only throughput excludes prefill wall time, so its rate is
+    # at least the aggregate rate
+    assert st["decode_tokens"] == st["total_new_tokens"] - st["admissions"]
+    assert st["decode_wall_s"] > 0 and st["decode_wall_s"] < st["wall_s"]
+    assert st["decode_tok_s"] >= st["tokens_per_s"]
+    assert st["ttft_p50_s"] <= st["ttft_p95_s"]
+    assert st["ttft_p95_s"] <= max(st["ttft_s"])
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +287,41 @@ def test_prefill_lengths_gather_matches_exact_prefill(served_model):
                                           lengths=jnp.asarray([5], jnp.int32))
     np.testing.assert_allclose(np.asarray(exact), np.asarray(via_len),
                                atol=1e-5, rtol=1e-5)
+
+
+def test_prefill_chunk_matches_monolithic_prefill(served_model):
+    """Chunked in-place prefill (3 chunks into shared-cache row 1) produces
+    the same last-token logits and the same KV row as one whole-prompt
+    prefill (f32 cache: no chunk-boundary rounding)."""
+    cfg, packed, ctx = served_model
+    max_seq, slots, chunk = 16, 3, 4
+    prompt = np.asarray([5, 4, 3, 2, 1, 6, 7, 8, 9, 2], np.int32)  # 10 toks
+    plen = len(prompt)
+    exact_cache = transformer.init_cache(cfg, 1, max_seq, jnp.float32)
+    exact, exact_cache = transformer.prefill_step(
+        cfg, packed, jnp.asarray(prompt[None]), ctx, exact_cache)
+    cache = transformer.init_cache(cfg, slots, max_seq, jnp.float32)
+    slot = 1
+    logits = None
+    for lo in range(0, plen, chunk):
+        toks = np.zeros((slots, chunk), np.int32)
+        seg = prompt[lo:lo + chunk]
+        toks[slot, :len(seg)] = seg
+        logits, cache = transformer.prefill_chunk(
+            cfg, packed, jnp.asarray(toks), ctx, cache,
+            offsets=np.asarray([0, lo, 0], np.int32),
+            admit_mask=np.asarray([False, True, False]),
+            last_index=np.asarray(
+                [0, min(plen - 1 - lo, chunk - 1), 0], np.int32))
+    np.testing.assert_allclose(np.asarray(logits)[slot], np.asarray(exact)[0],
+                               atol=1e-4, rtol=1e-4)
+    # the written KV prefix of row `slot` matches the monolithic cache
+    np.testing.assert_allclose(
+        np.asarray(cache["k"][:, slot, :plen]),
+        np.asarray(exact_cache["k"][:, 0, :plen]), atol=1e-4, rtol=1e-4)
+    # other rows untouched
+    assert not np.asarray(cache["k"][:, 0]).any()
+    assert not np.asarray(cache["k"][:, 2]).any()
 
 
 def test_decode_attention_per_slot_lengths():
