@@ -1,13 +1,18 @@
-"""Serving throughput: device-resident fused decode vs per-tick baseline.
+"""Serving throughput: fused decode vs per-tick baseline vs paged KV cache.
 
-Two engine configurations over the same mixed workload, per slot count:
+Up to three engine configurations over the same mixed workload, per slot
+count:
 
   * ``fused``    — decode_block-tick `lax.scan` with on-device sampling +
-    chunked in-place prefill (this PR's hot path): one jit dispatch + one
-    host sync per `decode_block` tokens per lane;
+    chunked in-place prefill over a contiguous slots x max_seq KV cache:
+    one jit dispatch + one host sync per `decode_block` tokens per lane;
   * ``per_tick`` — decode_block=1 and whole-prompt chunks, i.e. the PR-1
     engine's dispatch pattern (one dispatch + full host sync per token, one
-    prefill call per prompt).
+    prefill call per prompt);
+  * ``paged``    — the fused hot path over the paged KV cache (global page
+    pool + per-slot block tables, ``--paged``): KV memory scales with live
+    tokens, reported as pool utilization, live-token peak and the number of
+    slots schedulable at the contiguous configuration's KV budget.
 
 Mixed prompt/generation lengths stress mid-flight admission; the report
 separates aggregate tok/s from decode-only tok/s (prefill wall time
@@ -15,9 +20,18 @@ excluded) and gives the per-request TTFT distribution.  CPU wall times on
 the reduced BitNet — shape of the scaling, not absolute TPU numbers (the
 Pallas kernels run in interpret mode on this host).
 
+``--page-size`` tuning: pages are the KV allocation *and* kernel-block
+granularity.  Small pages (4-8 tokens) track live tokens tightly — best
+when many short requests share a tight pool — but mean more scalar-prefetch
+entries and smaller DMA blocks; large pages (32+) amortize the block walk
+but strand up to ``page_size - 1`` dead tokens per slot and defer
+admissions earlier at a fixed pool.  16 is a good default at these shapes;
+on real TPUs prefer the largest page that still keeps pool utilization
+under ~90% for your workload mix.
+
 Run:  PYTHONPATH=src python -m benchmarks.serving_throughput
 JSON: PYTHONPATH=src python -m benchmarks.serving_throughput \
-          --json BENCH_serving.json
+          --paged --json BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -50,12 +64,15 @@ def make_requests(rng, n, vocab, max_prompt, max_new):
 
 
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
-            max_prompt, max_new, seed, mode):
+            max_prompt, max_new, seed, mode, paged=False, page_size=16,
+            kv_pages=None):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new)
-    eng = ServingEngine(cfg, packed, max_seq=max_prompt + max_new,
+    max_seq = max_prompt + max_new
+    eng = ServingEngine(cfg, packed, max_seq=max_seq,
                         batch_slots=slots, decode_block=decode_block,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, paged=paged,
+                        page_size=page_size, kv_pages=kv_pages)
     # warmup: chunked prefill + fused decode compile O(1) shapes, so two
     # tiny requests cover every program the timed run can hit
     eng.run([Request(prompt=rng.integers(0, cfg.vocab_size, size=5),
@@ -68,7 +85,7 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
     util = (s["decode_tokens"] / (s["decode_steps"] * slots)
             if s["decode_steps"] else 1.0)
     ttfts = np.asarray([r.ttft_s for r in reqs])
-    return {
+    out = {
         "mode": mode,
         "slots": slots,
         "decode_block": decode_block,
@@ -86,6 +103,32 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
         "ttft_p95_ms": float(np.percentile(ttfts, 95)) * 1e3,
     }
+    if paged:
+        # schedulable slots at the contiguous configuration's KV budget:
+        # contiguous provisioning pins ceil(max_seq / page) pages per slot
+        # regardless of request length; paged admission only reserves each
+        # request's worst case, so the same budget schedules budget /
+        # mean(reservation) slots.  All derived metrics use the engine's
+        # ACTUAL page size (it clamps to max_seq) and its own reservation
+        # formula, so they cannot drift from the admission policy.
+        ps = s["kv_page_size"]
+        budget_pages = slots * -(-max_seq // ps)
+        mean_res = float(np.mean([eng.worst_case_pages(r) for r in reqs]))
+        out.update({
+            "kv_page_size": ps,
+            "kv_pool_pages": s["kv_pool_pages"],
+            "kv_pages_peak": s["kv_pages_peak"],
+            "kv_pool_util_peak": s["kv_pool_util_peak"],
+            "kv_live_tokens_peak": s["kv_live_tokens_peak"],
+            "kv_tokens_peak": s["kv_pages_peak"] * ps,
+            "kv_tokens_contiguous": slots * max_seq,
+            "admissions_deferred_pages": s["admissions_deferred_pages"],
+            "fixed_budget_pages": budget_pages,
+            "mean_reserved_pages_per_request": mean_res,
+            "schedulable_slots_contiguous": slots,
+            "schedulable_slots_paged": int(budget_pages // mean_res),
+        })
+    return out
 
 
 def main():
@@ -99,6 +142,18 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-baseline", action="store_true",
                     help="only run the fused configuration")
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the paged-KV configuration (page pool + "
+                         "block tables) and report pool utilization")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged mode: tokens per KV page (allocation and "
+                         "kernel-block granularity; small pages track live "
+                         "tokens tightly, large pages amortize the block "
+                         "walk — see the module docstring)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged mode: total pool pages incl. the null page "
+                         "(default: full provisioning, "
+                         "slots*ceil(max_seq/page_size)+1)")
     ap.add_argument("--json", type=str, default=None,
                     help="write results to this JSON file")
     args = ap.parse_args()
@@ -110,7 +165,7 @@ def main():
     common = dict(n_requests=args.n_requests, max_prompt=args.max_prompt,
                   max_new=args.max_new, seed=args.seed)
 
-    rows, speedup = [], {}
+    rows, speedup, paged_vs_fused = [], {}, {}
     cols = ("mode,slots,tok_s,decode_tok_s,slot_util,mid_flight,"
             "ttft_p50_ms,ttft_p95_ms,decode_blocks")
     print(cols)
@@ -126,6 +181,14 @@ def main():
                                mode="per_tick", **common)
             configs.append(per_tick)
             speedup[str(slots)] = fused["tok_s"] / per_tick["tok_s"]
+        if args.paged:
+            paged = run_one(cfg, packed, slots=slots,
+                            decode_block=args.decode_block,
+                            prefill_chunk=args.prefill_chunk, mode="paged",
+                            paged=True, page_size=args.page_size,
+                            kv_pages=args.kv_pages, **common)
+            configs.append(paged)
+            paged_vs_fused[str(slots)] = paged["tok_s"] / fused["tok_s"]
         for r in configs:
             rows.append(r)
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"
@@ -135,6 +198,13 @@ def main():
         if str(slots) in speedup:
             print(f"# slots={slots}: fused vs per-tick speedup "
                   f"{speedup[str(slots)]:.2f}x")
+        if args.paged:
+            print(f"# slots={slots}: paged KV peak {paged['kv_tokens_peak']}"
+                  f" tokens vs contiguous {paged['kv_tokens_contiguous']}"
+                  f" (pool util {paged['kv_pool_util_peak']:.2f}); at this "
+                  f"KV budget paged schedules "
+                  f"{paged['schedulable_slots_paged']} slots vs "
+                  f"{paged['schedulable_slots_contiguous']}")
 
     if args.json:
         payload = {
@@ -142,9 +212,11 @@ def main():
             "host": {"backend": jax.default_backend(),
                      "interpret_kernels": jax.default_backend() != "tpu"},
             "workload": {**common, "decode_block": args.decode_block,
-                         "prefill_chunk": args.prefill_chunk},
+                         "prefill_chunk": args.prefill_chunk,
+                         "page_size": args.page_size if args.paged else None},
             "results": rows,
             "speedup_fused_vs_per_tick": speedup,
+            "speedup_paged_vs_fused": paged_vs_fused,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -10,6 +10,18 @@ slack, paddings) are masked via a scalar-prefetched length.
 
 A split-KV (flash-decoding) wrapper in ops.py shards the sequence dimension —
 the long-context path a 2-port DDR FPGA cannot take but a TPU pod can.
+
+The *paged* variant streams the KV cache out of a global page pool instead of
+a contiguous per-slot row: each slot owns an ordered list of fixed-size pages
+(``page_size`` tokens), named by a per-slot block table.  The block table is
+scalar-prefetched, and the BlockSpec index map dereferences it — grid step
+``(bi, hi, ki)`` DMAs pool page ``block_tables[bi, ki]``.  The grid still
+spans the full static table width, but compute is issued only for owned
+pages: dead table entries point at the reserved null page, whose (cheap,
+repeated-block) fetch is followed by a ``pl.when`` skip of all MXU work.
+This removes both the contiguous path's pad-copy (pool pages are block-
+aligned by construction) and the dead-tail compute of short slots in a
+long-`max_seq` cache.
 """
 
 from __future__ import annotations
@@ -103,3 +115,104 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         interpret=interpret,
     )(lens, q, k, v)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         page_size: int):
+    """One grid step processes one pool page of one (slot, head) pair.
+
+    The page loaded by this step was chosen by the BlockSpec index map from
+    the scalar-prefetched block table; this body only needs the *logical*
+    page index ``ki`` to recover absolute token positions and the live-length
+    mask.  Pages at or beyond the slot's live length issue no compute."""
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[bi]
+    k_start = ki * page_size
+
+    @pl.when(k_start < cache_len)  # dead pages: no MXU work
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (1, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (page_size, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)       # (page_size, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_ids = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        mask = k_ids < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, block_tables: jax.Array,
+                                  cache_len: jax.Array, *, scale: float,
+                                  interpret: bool) -> jax.Array:
+    """q: (b, h, 1, d); k_pool, v_pool: (num_pages, page_size, kv_h, d) —
+    the global KV page pool; block_tables: (b, n_pages) int32 page ids (dead
+    entries must name a valid page — the engine parks them on the reserved
+    null page 0); cache_len: int32 scalar or (b,) live lengths.
+
+    Returns (b, h, 1, d).  No padding is ever required: the pool's page axis
+    is the block axis, so every block is full-size by construction."""
+    b, h, _, d = q.shape
+    page_size, kv_h = k_pool.shape[1], k_pool.shape[2]
+    n_pages = block_tables.shape[1]
+    assert h % kv_h == 0
+    group = h // kv_h
+    grid = (b, h, n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block tables + live lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bi, hi, ki, bt_ref, len_ref: (bi, hi, 0, 0)),
+            # the paged gather: the index map dereferences the block table,
+            # so this step's DMA fetches pool page block_tables[bi, ki]
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, ki, bt_ref, len_ref:
+                         (bt_ref[bi, ki], 0, hi // group, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, ki, bt_ref, len_ref:
+                         (bt_ref[bi, ki], 0, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bi, hi, ki, bt_ref, len_ref:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    bt = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale,
+                          page_size=page_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(bt, lens, q, k_pool, v_pool)

@@ -50,6 +50,33 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_tables: jax.Array, cache_len: jax.Array, *,
+                           interpret: bool | None = None) -> jax.Array:
+    """Single-token GQA attention against a *paged* KV cache.
+
+    q: (b, h, 1, d); k_pool, v_pool: (num_pages, page_size, kv_h, d) — the
+    global page pool shared by every slot; block_tables: (b, n_pages) int32
+    page ids per slot (dead entries must point at the reserved null page so
+    their DMA target is valid — they are skipped before any compute);
+    cache_len: int32 scalar or (b,) per-slot live lengths.
+
+    Unlike the contiguous path there is never a pad copy: the pool's page
+    axis *is* the block axis, so every KV block is full-size by construction,
+    and compute is issued only for pages a slot owns (a slot with 40 live
+    tokens in a 4096-token ``max_seq`` does attention work for 3 16-token
+    pages, not 4096 rows — the dead grid steps fetch the null page and skip).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    d = q.shape[3]
+    scale = 1.0 / float(d) ** 0.5
+    return kernel.paged_decode_attention_pallas(
+        q, k_pool, v_pool, jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(cache_len), scale=scale, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("n_splits", "bkv", "interpret"))
 def decode_attention_splitk(q: jax.Array, k: jax.Array, v: jax.Array,
                             cache_len: jax.Array, *, n_splits: int = 4,
@@ -62,10 +89,32 @@ def decode_attention_splitk(q: jax.Array, k: jax.Array, v: jax.Array,
     make — chunks map onto sequence-sharded devices or onto parallel grid
     work.  Implemented with the jnp oracle math per chunk so it also serves
     as the sequence-parallel reference for the sharded serve path.
+
+    Non-divisible geometries follow the same pad-avoidance rule as
+    ``decode_attention``: prefer a nearby split count that divides ``s`` (a
+    tail pad is a full K/V copy per call) — but only while it keeps at
+    least half the requested parallelism; a split-resistant length pads the
+    tail instead (masked by ``cache_len``), because padding beats a
+    degenerate split count.
     """
     b, h, _, d = q.shape
     kv_h, s = k.shape[1], k.shape[2]
-    assert s % n_splits == 0
+    if s % n_splits:
+        # nearby split count that divides s, floored at half the requested
+        # parallelism (mirroring decode_attention's divisor-candidate rule)
+        cand = n_splits
+        floor = max(1, n_splits // 2)
+        while cand > floor and s % cand:
+            cand -= 1
+        if s % cand == 0:
+            n_splits = cand
+        else:  # no acceptable divisor: keep the parallelism, pad + mask
+            chunk_p = -(-s // n_splits)
+            pad = n_splits * chunk_p - s
+            widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+            k = jnp.pad(k, widths)
+            v = jnp.pad(v, widths)
+            s = s + pad
     chunk = s // n_splits
     scale = 1.0 / float(d) ** 0.5
     kc = k.reshape(b, kv_h, n_splits, chunk, d)

@@ -25,3 +25,25 @@ def decode_attention_ref(q, k, v, cache_len, *, scale=None):
     p = jax.nn.softmax(s_vec, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
                       ).astype(q.dtype)
+
+
+def gather_pages_ref(pool, block_tables):
+    """Materialize per-slot contiguous KV rows from the page pool.
+
+    pool: (num_pages, page_size, kv_h, d); block_tables: (b, n_pages) int32
+    -> (b, kv_h, n_pages * page_size, d).  Dead table entries gather the
+    null page; their positions sit at or beyond the slot's live length and
+    must be masked by the caller's ``cache_len``."""
+    g = pool[block_tables]                       # (b, n, ps, kv_h, d)
+    b, n, ps = g.shape[:3]
+    return g.reshape(b, n * ps, g.shape[3], g.shape[4]).transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
+                               scale=None):
+    """Oracle for paged decode attention: gather pages into contiguous rows,
+    then run the contiguous oracle.  q: (b, h, 1, d); pools:
+    (num_pages, page_size, kv_h, d); block_tables: (b, n_pages)."""
+    k = gather_pages_ref(k_pool, block_tables)
+    v = gather_pages_ref(v_pool, block_tables)
+    return decode_attention_ref(q, k, v, cache_len, scale=scale)

@@ -76,3 +76,42 @@ def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
         q, k, v, jnp.asarray(offset, jnp.int32), scale=scale, window=window,
         bq=bq, bkv=bkv, interpret=interpret)
     return out[:, :, :t]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "interpret"))
+def flash_chunk_prefill_paged(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              offset: jax.Array, k_fresh: jax.Array,
+                              v_fresh: jax.Array, *,
+                              window: int | None = None, bq: int = 128,
+                              interpret: bool | None = None) -> jax.Array:
+    """Paged chunked-prefill GQA attention: per-row prompt chunks vs the
+    slot's block-table-indexed KV prefix.
+
+    q: (b, h, t, d) — row i's chunk queries at absolute positions
+    ``offset[i] + [0, t)``; k_pool, v_pool: (num_pages, page_size, kv_h, d)
+    — the global page pool whose ``[0, offset[i])`` prefix of row i's pages
+    is live; block_tables: (b, n_pages) int32 page ids (dead entries must
+    name a valid page, conventionally the null page 0); k_fresh, v_fresh:
+    (b, kv_h, t, d) — the chunk's own K/V in compute precision (attended in
+    place of the pool for positions >= offset, exactly like the contiguous
+    path's fresh-chunk overlay).  Pads t to the q-block multiple; the pool
+    never needs padding (pages are block-aligned by construction).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, t, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    bq = min(bq, t)
+    pad_q = (-t) % bq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        widths = ((0, 0), (0, 0), (0, pad_q), (0, 0))
+        # padded fresh keys sit beyond every real query's causal reach
+        k_fresh = jnp.pad(k_fresh, widths)
+        v_fresh = jnp.pad(v_fresh, widths)
+    out = kernel.flash_chunk_prefill_paged_pallas(
+        q, k_pool, v_pool, jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(offset, jnp.int32), k_fresh, v_fresh, scale=scale,
+        window=window, bq=bq, interpret=interpret)
+    return out[:, :, :t]

@@ -21,6 +21,11 @@ Mirrors the paper's split (§3.6/§3.7):
 * Decode — single-token attention against the KV cache
   (``decode_attention_xla``; kernels/decode_attention on TPU), masked to the
   live cache length and optionally to a sliding window.
+* Paged KV — both serving phases also run against a *paged* cache (global
+  page pool + per-slot block tables, see the "Paged KV cache" section
+  below): ``paged_decode_attention`` / ``paged_chunk_prefill_attention``
+  stream only the pages a slot owns, so KV memory and bandwidth scale with
+  live tokens instead of ``slots x max_seq``.
 """
 
 from __future__ import annotations
@@ -455,6 +460,130 @@ def decode_attention(q, k, v, cache_len, *, window=None, impl="xla"):
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention(q, k, v, cache_len)
     return decode_attention_xla(q, k, v, cache_len, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: global page pool + per-slot block tables
+# ---------------------------------------------------------------------------
+#
+# Storage contract (shared by the serving engine, the model entry points and
+# all three attention implementations): the cache is a global pool of
+# fixed-size pages, k/v (num_pages, page_size, kv_h, hd), and each slot owns
+# an ordered page list named by its block-table row (b, n_pages) — slot i's
+# flat token position p lives at pool[bt[i, p // page_size], p % page_size].
+# Page 0 is the reserved *null page*: it is never owned by any slot, dead
+# block-table entries point at it, and every write without a live target
+# (masked admission row, position beyond the table) is routed into it — this
+# is what replaces the contiguous path's inactive-lane tail parking.
+
+def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize contiguous per-slot KV rows from the page pool (the XLA
+    fallback's gather; the Pallas kernels stream pages without it).
+
+    pool: (num_pages, page_size, kv_h, hd); block_table: (b, n_pages) int32
+    -> (b, kv_h, n_pages * page_size, hd).  Dead entries gather the null
+    page; their positions sit at or beyond the slot's live length and are
+    masked downstream by ``cache_len``/causality.  One implementation — the
+    kernel package's oracle helper — so the layout contract lives in a
+    single place."""
+    from repro.kernels.decode_attention.ref import gather_pages_ref
+    return gather_pages_ref(pool, block_table)
+
+
+def paged_update_kv_cache(k_pool: jax.Array, v_pool: jax.Array,
+                          k_new: jax.Array, v_new: jax.Array,
+                          block_table: jax.Array, pos,
+                          write_mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter new KV into the page pool at ``(block_id, offset)``.
+
+    k_pool, v_pool: (num_pages, page_size, kv_h, hd); k_new, v_new:
+    (b, t, kv_h, hd); block_table: (b, n_pages) int32; ``pos`` is a scalar or
+    (b,) vector of flat start positions — token j of row i lands at flat
+    position ``pos[i] + j``, i.e. page ``bt[i, (pos[i]+j) // page_size]``,
+    offset ``(pos[i]+j) % page_size``.
+
+    Writes with no live target are routed into the null page (page 0):
+    rows with ``write_mask[i] == False``, and positions whose page index
+    falls outside the block table (an inactive lane parked at ``max_seq``).
+    A slot that owns no pages has an all-zero table row, so its writes land
+    in the null page with no mask plumbing at all — the paged replacement
+    for the contiguous path's ``max_seq - 1`` tail parking."""
+    b, t = k_new.shape[:2]
+    page_size = k_pool.shape[1]
+    n_pages = block_table.shape[1]
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p, (b,))
+    flat = p[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]   # (b, t)
+    pi = flat // page_size
+    oi = flat % page_size
+    valid = pi < n_pages
+    if write_mask is not None:
+        valid = jnp.logical_and(valid, jnp.asarray(write_mask,
+                                                   jnp.bool_)[:, None])
+    pages = jnp.take_along_axis(block_table.astype(jnp.int32),
+                                jnp.minimum(pi, n_pages - 1), axis=1)
+    pages = jnp.where(valid, pages, 0)   # dead writes -> null page
+    oi = jnp.where(valid, oi, 0)
+    k_pool = k_pool.at[pages, oi].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[pages, oi].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len, *,
+                           window=None, impl="xla"):
+    """Single-token attention against the paged cache.
+
+    q: (b, h, 1, d); pools: (num_pages, page_size, kv_h, d); block_table:
+    (b, n_pages); cache_len as in ``decode_attention``.  The Pallas path
+    scalar-prefetches the block table and streams only owned pages; the XLA
+    path gathers the slot's pages into contiguous rows and reuses
+    ``decode_attention_xla`` (also the sliding-window fallback)."""
+    if impl == "pallas" and window is None:
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.decode_attention_paged(q, k_pool, v_pool, block_table,
+                                             cache_len)
+    k = gather_kv_pages(k_pool, block_table).astype(q.dtype)
+    v = gather_kv_pages(v_pool, block_table).astype(q.dtype)
+    return decode_attention_xla(q, k, v, cache_len, window=window)
+
+
+def paged_chunk_prefill_attention_xla(q, k_pool, v_pool, block_table, offset,
+                                      k_fresh, v_fresh, *, window=None):
+    """XLA fallback for paged chunk-vs-prefix attention: gather each row's
+    pages into a contiguous row, overlay the chunk's fresh K/V at the row's
+    offset (positions >= offset must come from the full-precision operands,
+    matching the contiguous path's overlay), then reuse the contiguous
+    formulation.  q: (b, h, t, d); k_fresh, v_fresh: (b, kv_h, t, d)."""
+    k = gather_kv_pages(k_pool, block_table).astype(q.dtype)
+    v = gather_kv_pages(v_pool, block_table).astype(q.dtype)
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.broadcast_to(off, (q.shape[0],))
+
+    def overlay(row, new, o):   # row: (kv_h, S', d); new: (kv_h, t, d)
+        return jax.lax.dynamic_update_slice_in_dim(row, new.astype(row.dtype),
+                                                   o, axis=1)
+
+    k = jax.vmap(overlay)(k, k_fresh, off)
+    v = jax.vmap(overlay)(v, v_fresh, off)
+    return chunk_prefill_attention_xla(q, k, v, off, window=window)
+
+
+def paged_chunk_prefill_attention(q, k_pool, v_pool, block_table, offset,
+                                  k_fresh, v_fresh, *, window=None,
+                                  impl="xla"):
+    """Dispatch paged chunk-vs-prefix attention: xla (gather + overlay) |
+    pallas (block-table streaming, no gather copy)."""
+    if impl == "pallas":
+        from repro.kernels.flash_prefill import ops as fp_ops
+        return fp_ops.flash_chunk_prefill_paged(
+            q, k_pool, v_pool, block_table, offset, k_fresh, v_fresh,
+            window=window)
+    return paged_chunk_prefill_attention_xla(
+        q, k_pool, v_pool, block_table, offset, k_fresh, v_fresh,
+        window=window)
 
 
 def update_cache_slice(cache: jax.Array, new: jax.Array, pos,

@@ -219,6 +219,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged KV cache: a global pool of ``num_pages`` fixed-size pages of
+    ``page_size`` tokens each, shared by every serving slot and addressed
+    through per-slot block tables (see ``attention.paged_update_kv_cache``).
+
+    Page 0 is the reserved null page (never owned by a slot; the target of
+    every dead write).  Requires attention blocks — recurrent state (SSM /
+    xLSTM) is O(1) per slot and has nothing to page."""
+    if cfg.block_kind != "attn":
+        raise NotImplementedError(
+            f"paged KV cache requires block_kind='attn' "
+            f"(got {cfg.block_kind!r})")
+    n_scan = n_scan_layers(cfg)
+    shape = (n_scan, num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 # ---------------------------------------------------------------------------
 # Attention sub-layer (shared by attn and hymba blocks)
 # ---------------------------------------------------------------------------
@@ -226,7 +244,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
                 cache: Optional[dict], positions: jax.Array,
                 phase: str, cache_len,
-                chunk_mask=None) -> Tuple[jax.Array, Optional[dict]]:
+                chunk_mask=None,
+                page_table=None) -> Tuple[jax.Array, Optional[dict]]:
     b, t, _ = x.shape
     if "qkv" in p:  # fused projection (pre-decoded serving hot path)
         qkv = layers.linear_apply(p["qkv"], x, ctx)
@@ -244,6 +263,9 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
     k = layers.apply_rope(k, angles, cfg.rope_style)
 
     quantized = cache is not None and "k_scale" in cache
+    if page_table is not None and quantized:
+        raise NotImplementedError(
+            "paged KV cache does not support the int8-quantized cache yet")
 
     def q_kv(x):  # (b, t, kv_h, hd) -> int8 values + (b, t, kv_h) scale
         amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
@@ -290,6 +312,25 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
         offsets = cache_len  # (b,) per-row admission offsets
         admit = chunk_mask   # (b,) bool: row is admitting this wave
 
+        if page_table is not None:
+            # paged: scatter the chunk's KV into (block_id, offset) of the
+            # page pool (masked rows route to the null page), then attend
+            # the block-table prefix + the chunk's own fresh K/V — the
+            # fresh operands play the contiguous path's overlay role, so
+            # within-chunk numerics match monolithic prefill.
+            kc, vc = attention.paged_update_kv_cache(
+                cache["k"], cache["v"], k, v, page_table, offsets,
+                write_mask=admit)
+            new_cache = {"k": kc, "v": vc}
+            kc_r, vc_r = jax.lax.optimization_barrier((kc, vc))
+            o = attention.paged_chunk_prefill_attention(
+                q.transpose(0, 2, 1, 3), kc_r, vc_r, page_table, offsets,
+                k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                window=cfg.swa_window,
+                impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+            o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+            return layers.linear_apply(p["o"], o, ctx), new_cache
+
         def write_row(row_c, new, off, m):
             cur = jax.lax.dynamic_slice_in_dim(row_c, off, t, axis=0)
             upd = jnp.where(m, new.astype(row_c.dtype), cur)
@@ -325,6 +366,22 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             v_read.transpose(0, 2, 1, 3), offsets, window=cfg.swa_window,
             impl="pallas" if ctx.attn_impl == "pallas" else "xla")
     else:  # decode step: t == 1
+        if page_table is not None:
+            # paged: append the token's KV at (block_id, offset); writes
+            # whose position resolves past the block table (an inactive
+            # lane parked at max_seq) land in the null page.  Attention
+            # streams only the slot's owned pages (Pallas) or gathers
+            # them (XLA).
+            kc, vc = attention.paged_update_kv_cache(
+                cache["k"], cache["v"], k, v, page_table, cache_len)
+            new_cache = {"k": kc, "v": vc}
+            k_read, v_read = jax.lax.optimization_barrier((kc, vc))
+            o = attention.paged_decode_attention(
+                q.transpose(0, 2, 1, 3), k_read, v_read, page_table,
+                cache_len + 1, window=cfg.swa_window,
+                impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+            o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+            return layers.linear_apply(p["o"], o, ctx), new_cache
         if quantized:
             kq, ks = q_kv(k)
             vq, vs = q_kv(v)
@@ -367,7 +424,8 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
 def _block_apply(cfg: ModelConfig, ctx: Ctx, x: jax.Array, p: dict,
                  cache: Optional[dict], positions: jax.Array, phase: str,
                  cache_len,
-                 chunk_mask=None) -> Tuple[jax.Array, Optional[dict]]:
+                 chunk_mask=None,
+                 page_table=None) -> Tuple[jax.Array, Optional[dict]]:
     new_cache = {}
     if cfg.block_kind == "xlstm_pair":
         want_state = cache is not None
@@ -408,7 +466,7 @@ def _block_apply(cfg: ModelConfig, ctx: Ctx, x: jax.Array, p: dict,
                       ("k", "v", "k_scale", "v_scale") if k_ in cache}
     attn_out, kv_cache = _attn_apply(cfg, ctx, p["attn"], h, attn_cache,
                                      positions, phase, cache_len,
-                                     chunk_mask)
+                                     chunk_mask, page_table)
     if kv_cache is not None:
         new_cache.update(kv_cache)
     if cfg.block_kind == "hymba":
@@ -469,13 +527,14 @@ def _lm_head(cfg: ModelConfig, params: dict, x: jax.Array,
 
 def _run_layers(cfg: ModelConfig, ctx: Ctx, params: dict, x: jax.Array,
                 cache: Optional[dict], positions: jax.Array, phase: str,
-                cache_len, remat: bool = True, chunk_mask=None):
+                cache_len, remat: bool = True, chunk_mask=None,
+                page_table=None):
     def body(carry, xs):
         layer_p, layer_cache = xs
         carry = ctx.c(carry, "residual")  # SP/TP layout between blocks
         y, new_cache = _block_apply(cfg, ctx, carry, layer_p, layer_cache,
                                     positions, phase, cache_len,
-                                    chunk_mask)
+                                    chunk_mask, page_table)
         return y, new_cache
 
     if remat:
@@ -565,7 +624,8 @@ def prefill_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
 
 
 def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
-                  cache: dict, *, offsets, admit_mask, last_index):
+                  cache: dict, *, offsets, admit_mask, last_index,
+                  page_table=None):
     """One admission *wave* of a continuous batch -> (logits (b, vocab), cache).
 
     ``inputs`` is (b, C) — one prompt chunk per shared-cache row, where b is
@@ -589,6 +649,12 @@ def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
     tail, and the tail's cache entries sit at positions >= the request's
     live length.
 
+    With ``page_table`` ((b, n_pages) int32), ``cache`` is a paged pool from
+    ``init_paged_cache`` instead of contiguous rows: row i's chunk KV is
+    scattered to ``(page_table[i, pos // page_size], pos % page_size)`` and
+    the prefix is attended through the block table (masked rows' writes are
+    routed to the null page).
+
     Requires attention blocks — recurrent kinds (SSM/xLSTM) integrate every
     input token into their state, which cannot be resumed chunk-to-chunk
     without carrying the state; the engine prefills those at full length.
@@ -602,8 +668,11 @@ def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
     offsets = jnp.asarray(offsets, jnp.int32)
     admit = jnp.asarray(admit_mask, jnp.bool_)
     positions = offsets[:, None] + jnp.arange(c)[None, :]  # (b, C)
+    pt = (None if page_table is None
+          else jnp.asarray(page_table, jnp.int32))
     x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "chunk",
-                               offsets, remat=False, chunk_mask=admit)
+                               offsets, remat=False, chunk_mask=admit,
+                               page_table=pt)
     idx = jnp.asarray(last_index, jnp.int32)[:, None, None]
     last = jnp.take_along_axis(
         x, jnp.broadcast_to(idx, (b, 1, x.shape[2])), axis=1)
@@ -612,7 +681,7 @@ def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
 
 
 def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
-                cache: dict, cache_len: jax.Array):
+                cache: dict, cache_len: jax.Array, page_table=None):
     """One token (b, 1) + cache + live length -> (logits (b, vocab), cache).
 
     ``cache_len`` is a scalar (all rows at the same offset) or a (b,) vector
@@ -620,11 +689,18 @@ def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
     rotates its query/key by its own position, and attends only its own
     [0, cache_len[i]] prefix — the ragged decode step continuous batching
     needs.
+
+    With ``page_table`` ((b, n_pages) int32), ``cache`` is a paged pool from
+    ``init_paged_cache``: each row appends at
+    ``(page_table[i, cache_len[i] // page_size], cache_len[i] % page_size)``
+    and attends only the pages it owns.
     """
     x = _embed_in(cfg, params, inputs, ctx)
     cl = jnp.asarray(cache_len)
     positions = cl[..., None] + jnp.arange(1)  # (1,) or (b, 1)
+    pt = (None if page_table is None
+          else jnp.asarray(page_table, jnp.int32))
     x, new_cache = _run_layers(cfg, ctx, params, x, cache, positions, "step",
-                               cl, remat=False)
+                               cl, remat=False, page_table=pt)
     logits = _lm_head(cfg, params, x, ctx)
     return logits[:, 0], new_cache

@@ -35,11 +35,43 @@ keeps the whole serving tick on device:
     dispatch (``stats["max_chunks_between_decode_blocks"]`` records the
     bound).
 
-Slot state machine (host side, one ``_Slot`` per decode lane):
+**Paged KV cache** (``paged=True``): instead of one contiguous ``max_seq``
+cache row per slot, the engine owns a global pool of fixed-size KV pages
+(``page_size`` tokens each; page 0 is the reserved *null page*) plus a
+per-slot block table.  A host-side free-list allocator hands pages out
+lazily — at admission a slot holds only the pages its written prompt prefix
+needs, and decode grows the table page-by-page — so KV memory scales with
+*live tokens*, not ``slots x max_seq``.  The block table keeps its full
+static width (one compiled program; dead columns are null entries the
+Pallas kernels skip without issuing work — slicing the width was measured
+to cost more in recompiles than it saves in gather).  Admission is gated
+by worst-case
+reservation (``ceil(min(prompt + max_new, max_seq) / page_size)`` pages per
+request, FIFO): a request is only admitted when the sum of active
+reservations still fits the pool, which guarantees lazy growth can never
+fail mid-decode while letting many short requests share a pool that could
+not hold them contiguously.  Retiring a slot returns its pages to the free
+list and zeroes its block-table row; recycled pages carry stale KV, which is
+invisible because a new owner's prefill rewrites every position below its
+live length and attention masks the rest.  The contiguous path's
+inactive-lane tail parking simplifies: inactive lanes park at flat address
+``max_seq``, which the block table resolves to the null page (or to the
+final page's never-live slack row), so no live token can ever be clobbered
+regardless of what the lane's pages hold.
+Device-side layout and kernels live in ``transformer.init_paged_cache``,
+``attention.paged_*`` and the paged Pallas kernels in
+``kernels/decode_attention`` / ``kernels/flash_prefill``.
 
-    FREE --admit(chunk*, first token sampled on device)--> ACTIVE
-    ACTIVE --decode block (emitted += k, cache_len += k)--> ACTIVE
-    ACTIVE --emitted == max_new_tokens or cache_len == max_seq--> FREE
+Slot state machine (host side, one ``_Slot`` per decode lane; bracketed
+steps are paged-mode only):
+
+    FREE --[reserve worst-case pages]--
+         admit(chunk* [+ grow pages over the written prefix],
+               first token sampled on device)--> ACTIVE
+    ACTIVE --decode block [grow pages to cover the block's appends]
+             (emitted += k, cache_len += k)--> ACTIVE
+    ACTIVE --emitted == max_new_tokens or cache_len == max_seq-->
+           FREE [pages + reservation returned, block-table row zeroed]
 
 Sampling is reproducible per request: each slot's PRNG key is
 ``fold_in(PRNGKey(request.seed), emitted_index)``, so a request's output
@@ -53,7 +85,9 @@ donor prefill + adopt — the fused decode block works for them unchanged.
 
 ``engine.stats`` reports aggregate *and* decode-only throughput
 (``decode_tokens / decode_wall_s``), TTFT p50/p95, and admission /
-interleave counters.
+interleave counters; paged mode adds KV pool gauges (page size, pool size,
+pages-in-use peak, pool utilization, live-token peak, reservation peak,
+page-starved admission deferrals).
 """
 
 from __future__ import annotations
@@ -113,16 +147,73 @@ class _Slot:
         self.last_token = 0
 
 
+class _PagePool:
+    """Host-side free-list allocator over the global KV page pool.
+
+    Page 0 is the reserved null page: it is never handed out, dead
+    block-table entries point at it, and every device-side write without a
+    live target is routed into it.  The free list is LIFO so recently
+    retired (cache-hot) pages are reused first."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("page pool needs >= 2 pages (one is the "
+                             "reserved null page)")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def usable(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.usable - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: asked {n}, have {len(self._free)} "
+                "(reservation-gated admission should make this unreachable)")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, packed_params, *, max_seq: int,
                  batch_slots: int = 4, ctx: Optional[Ctx] = None,
                  seed: int = 0, prefill_chunk: int = 32,
-                 decode_block: int = 8, cache_dtype=jnp.bfloat16):
+                 decode_block: int = 8, cache_dtype=jnp.bfloat16,
+                 paged: bool = False, page_size: int = 16,
+                 kv_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
         self.slots = batch_slots
         self.decode_block = max(1, decode_block)
+        self.paged = bool(paged)
+        if self.paged:
+            if cfg.block_kind != "attn":
+                raise ValueError(
+                    "paged KV cache requires block_kind='attn' (recurrent "
+                    f"kinds keep O(1) state per slot); got {cfg.block_kind!r}")
+            self.page_size = max(1, min(int(page_size), max_seq))
+            self.pages_per_slot = -(-max_seq // self.page_size)
+            # default pool: full provisioning (every slot can reach max_seq)
+            # + the null page; pass a smaller kv_pages to trade capacity for
+            # memory — admission then defers when reservations would overflow
+            self.kv_pages = (int(kv_pages) if kv_pages is not None
+                             else batch_slots * self.pages_per_slot + 1)
+        else:
+            self.page_size = None
+            self.pages_per_slot = 0
+            self.kv_pages = 0
         # any chunk size <= max_seq works: a final chunk that would run past
         # the end of its cache row is shifted back to end exactly at
         # max_seq (its leading overlap rewrites positions the previous
@@ -137,6 +228,10 @@ class ServingEngine:
 
         cfg_, ctx_ = self.cfg, self.ctx
         max_seq_, block_ = self.max_seq, self.decode_block
+        paged_ = self.paged
+        # contiguous mode passes this inert placeholder for the block-table
+        # argument (the traced value is unused and DCE'd)
+        self._no_bt = jnp.zeros((1, 1), jnp.int32)
 
         def _sample(logits, seeds, emitted, temps):
             """Per-slot sampling: greedy, or categorical keyed by
@@ -159,23 +254,26 @@ class ServingEngine:
                                 lambda _: greedy, None)
 
         @functools.partial(jax.jit, donate_argnums=(2,))
-        def _prefill_chunks(params, tokens, cache, offsets, admit_mask,
+        def _prefill_chunks(params, tokens, cache, bt, offsets, admit_mask,
                             last_idx, seeds, temps):
             """One admission wave: a (slots, C) chunk batch written in place
             at per-row offsets; rows not admitting are masked.  First tokens
             for rows whose prompt ends in this chunk are sampled on device
             (emitted index 0).  Weights are pre-decoded once per wave (exact
-            f32-GEMM path), like the decode block."""
+            f32-GEMM path), like the decode block.  In paged mode ``bt`` is
+            the (slots, pages_per_slot) block table and the chunk KV is
+            scattered into the page pool."""
             params = transformer.predecode_packed(cfg_, params)
             logits, cache = transformer.prefill_chunk(
                 cfg_, params, tokens, ctx_, cache, offsets=offsets,
-                admit_mask=admit_mask, last_index=last_idx)
+                admit_mask=admit_mask, last_index=last_idx,
+                page_table=bt if paged_ else None)
             first = _sample(logits, seeds, jnp.zeros_like(seeds), temps)
             return first, cache
 
         @functools.partial(jax.jit, donate_argnums=(2,))
-        def _decode_block(params, tokens, cache, cache_len, emitted, max_new,
-                          active, temps, seeds):
+        def _decode_block(params, tokens, cache, bt, cache_len, emitted,
+                          max_new, active, temps, seeds):
             """Fused multi-tick decode: scan `decode_block` ticks on device.
 
             The packed ternary weights are pre-decoded ONCE here, outside
@@ -185,21 +283,35 @@ class ServingEngine:
             outputs to the packed path.
 
             Finished lanes keep ticking under a mask (static scan shape):
-            they emit pad token 0, their bookkeeping freezes, and their KV
-            write is parked at the row tail where it is never attended
-            before being overwritten.
+            they emit pad token 0 and their bookkeeping freezes.  Their KV
+            write is parked at flat address ``max_seq``: contiguous mode
+            clamps that to the row tail (position ``max_seq - 1``), where it
+            is either masked by the live length or, for a lane that filled
+            its row, never attended again before the slot is retired
+            (asserted host-side); paged mode resolves it through the block
+            table to a location no live token can occupy — the null page, or
+            the final page's slack row when page_size does not divide
+            max_seq.
             """
             params = transformer.predecode_packed(cfg_, params)
 
             def tick(carry, _):
                 tokens, cache, cache_len, emitted, active = carry
-                # park inactive lanes' cache write at the row tail (clamped
-                # to max_seq - 1): positions >= the lane's live length are
-                # masked out of attention, and an active lane overwrites the
-                # tail before its mask ever reaches it
+                # park inactive lanes' cache write at flat address max_seq.
+                # An inactive lane is not necessarily empty: a mid-admission
+                # lane already holds written prompt KV that a cache_len-0
+                # write would clobber.  Contiguous mode clamps the park to
+                # row position max_seq - 1 (masked by the live length or
+                # never attended again — see the host-side assert).  Paged
+                # mode resolves max_seq through the block table to a page
+                # that can never hold a live token: past the table entirely
+                # (routed to the null page) or, when page_size does not
+                # divide max_seq, the final page's slack row past position
+                # max_seq - 1.
                 step_len = jnp.where(active, cache_len, max_seq_)
                 logits, cache = transformer.decode_step(
-                    cfg_, params, tokens[:, None], ctx_, cache, step_len)
+                    cfg_, params, tokens[:, None], ctx_, cache, step_len,
+                    page_table=bt if paged_ else None)
                 nxt = _sample(logits, seeds, emitted, temps)
                 out = jnp.where(active, nxt, 0)
                 tokens = jnp.where(active, nxt, tokens)
@@ -238,7 +350,8 @@ class ServingEngine:
         self._adopt = _adopt
 
     def compiled_shapes(self) -> dict:
-        """Live jit-cache entry counts (the O(1)-compile invariant).
+        """Live jit-cache entry counts (the O(1)-compile invariant; holds
+        for paged mode too — the block table has one static width).
 
         Values are None when the private jit cache introspection is
         unavailable (it is not public JAX API and has drifted before)."""
@@ -249,6 +362,66 @@ class ServingEngine:
                 return None
         return {"prefill_chunk": size(self._prefill_chunks),
                 "decode_block": size(self._decode_block)}
+
+    # -- paged-pool bookkeeping (host side) --------------------------------
+
+    def worst_case_pages(self, req: Request) -> int:
+        """Pages this request can ever need (its admission reservation):
+        the row stores at most min(prompt + max_new - 1, max_seq) KV
+        entries — the final emitted token's KV is never written (a lane is
+        done the tick it appears).  Public so benchmarks/schedulers share
+        the engine's reservation formula instead of re-deriving it."""
+        if not self.paged:
+            raise ValueError("worst_case_pages is only meaningful on a "
+                             "paged engine (paged=True)")
+        total = min(len(req.prompt) + req.max_new_tokens - 1, self.max_seq)
+        return -(-total // self.page_size)
+
+    def _grow_pages(self, i: int, upto_tokens: int) -> None:
+        """Lazily extend slot i's page list to cover flat positions
+        [0, upto_tokens).  Never exceeds the slot's admission reservation,
+        so the pool can't run dry mid-flight."""
+        need = -(-upto_tokens // self.page_size)
+        pages = self._slot_pages[i]
+        if need <= len(pages):
+            return
+        new = self._pool.alloc(need - len(pages))
+        for j, pid in enumerate(new, start=len(pages)):
+            self._bt[i, j] = pid
+        pages.extend(new)
+        self._bt_dev = None  # host table changed: re-upload on next dispatch
+        st = self.stats
+        st["kv_pages_peak"] = max(st["kv_pages_peak"], self._pool.used_pages)
+
+    def _free_slot(self, slots, i: int) -> None:
+        """Retire slot i: emit its output and (paged) return its pages and
+        reservation, zeroing its block-table row so later writes by the dead
+        lane land in the null page."""
+        if self.paged:
+            self._pool.free(self._slot_pages[i])
+            self._slot_pages[i] = []
+            self._reserved_total -= self._slot_reserved[i]
+            self._slot_reserved[i] = 0
+            self._bt[i, :] = 0
+            self._bt_dev = None
+        slots[i].free()
+
+    def _bt_device(self):
+        """Device block table at its full static width (pages_per_slot),
+        uploaded only when the host table changed (steady-state decode
+        re-uses the cached device array — no per-block transfer).
+
+        The width is deliberately NOT sliced to the live high-water page
+        count: every distinct width would recompile the fused decode block
+        and the prefill wave (measured: compile time dwarfs the gather
+        savings).  Dead columns are null-page entries, for which the Pallas
+        kernels issue no compute; only the XLA gather fallback pays for
+        them."""
+        if not self.paged:
+            return self._no_bt
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._bt)
+        return self._bt_dev
 
     # -- admission (chunked, in-place, batched across slots) ---------------
 
@@ -278,7 +451,7 @@ class ServingEngine:
         self.stats["admissions"] += 1
         # request finished at prefill (max_new == 1 or full cache)
         if len(s.tokens) >= req.max_new_tokens or s.cache_len >= self.max_seq:
-            s.free()
+            self._free_slot(slots, i)
 
     def _prefill_wave(self, cache, pending, slots, t0: float):
         """Dispatch one admission wave: advance EVERY pending admission by
@@ -320,13 +493,19 @@ class ServingEngine:
             last[i] = max(0, min(plen - 1 - lo, c - 1))
             seeds[i] = req.seed
             temps[i] = req.temperature
+            if self.paged:
+                # cover the chunk's live span [0, min(lo + C, plen));
+                # shifted-chunk slack writes past the prompt land either in
+                # the owned final page's masked tail (positions >= the live
+                # length) or, past the allocation, in the null page
+                self._grow_pages(i, min(lo + c, plen))
             admit["next"] += 1
             if admit["next"] >= admit["n_chunks"]:
                 completing.append(i)
         first, cache = self._prefill_chunks(
-            self.params, jnp.asarray(toks), cache, jnp.asarray(offs),
-            jnp.asarray(mask), jnp.asarray(last), jnp.asarray(seeds),
-            jnp.asarray(temps))
+            self.params, jnp.asarray(toks), cache, self._bt_device(),
+            jnp.asarray(offs), jnp.asarray(mask), jnp.asarray(last),
+            jnp.asarray(seeds), jnp.asarray(temps))
         if completing:
             ft = np.asarray(first)  # sync only when an admission completes
             for i in completing:
@@ -337,11 +516,26 @@ class ServingEngine:
 
     def _run_decode_block(self, cache, slots):
         t_blk = time.perf_counter()
+        if self.paged:
+            # grow each live lane's page list to cover every append this
+            # block can make — bounded by the lane's remaining budget, so it
+            # never exceeds the admission reservation
+            for i, s in enumerate(slots):
+                if s.active:
+                    remaining = s.request.max_new_tokens - len(s.tokens)
+                    upto = min(s.cache_len
+                               + min(self.decode_block, remaining),
+                               self.max_seq)
+                    self._grow_pages(i, upto)
+            live = sum(s.cache_len for s in slots if s.active)
+            self.stats["kv_live_tokens_peak"] = max(
+                self.stats["kv_live_tokens_peak"], live)
         reqs = [s.request for s in slots]
         blk, mask, cache = self._decode_block(
             self.params,
             jnp.asarray([s.last_token for s in slots], jnp.int32),
             cache,
+            self._bt_device(),
             jnp.asarray([s.cache_len for s in slots], jnp.int32),
             jnp.asarray([len(s.tokens) for s in slots], jnp.int32),
             jnp.asarray([r.max_new_tokens if r else 0 for r in reqs],
@@ -356,17 +550,34 @@ class ServingEngine:
         st["decode_blocks"] += 1
         st["decode_steps"] += self.decode_block
         st["decode_tokens"] += int(mask.sum())
+        live_after = 0  # post-append live tokens, counted before any free
         for i, s in enumerate(slots):
             if not s.active:
                 continue
             new = blk[i][mask[i]].tolist()
             s.tokens.extend(int(t) for t in new)
             s.cache_len += len(new)
+            live_after += s.cache_len
             if new:
                 s.last_token = int(new[-1])
             if (len(s.tokens) >= s.request.max_new_tokens
                     or s.cache_len >= self.max_seq):
-                s.free()
+                self._free_slot(slots, i)
+        if self.paged:
+            # the gauge at block entry misses the block's own appends; this
+            # post-append sample makes the live-token peak exact
+            st["kv_live_tokens_peak"] = max(st["kv_live_tokens_peak"],
+                                            live_after)
+        # the parked-write contract: the in-block park of a lane that filled
+        # its row (contiguous: clamped to max_seq - 1, clobbering its own
+        # last KV entry) is only safe because such a lane is retired HERE,
+        # before any dispatch could attend that row again.  A still-active
+        # lane at cache_len >= max_seq would read its own clobbered tail —
+        # fail fast (a RuntimeError, not an assert: this must survive -O)
+        if any(s.cache_len >= self.max_seq for s in slots if s.active):
+            raise RuntimeError(
+                "active lane at cache_len >= max_seq: parked decode writes "
+                "could clobber a live token")
         st["decode_wall_s"] += time.perf_counter() - t_blk
         return cache
 
@@ -381,6 +592,17 @@ class ServingEngine:
                       "decode_blocks": 0, "decode_tokens": 0,
                       "decode_wall_s": 0.0,
                       "max_chunks_between_decode_blocks": 0}
+        if self.paged:
+            self.stats.update({"kv_pages_peak": 0, "kv_live_tokens_peak": 0,
+                               "kv_reserved_pages_peak": 0,
+                               "admissions_deferred_pages": 0})
+            self._pool = _PagePool(self.kv_pages)
+            self._bt = np.zeros((self.slots, self.pages_per_slot), np.int32)
+            self._bt_dev = None  # cached device copy of self._bt
+            self._slot_pages: List[List[int]] = [[] for _ in
+                                                 range(self.slots)]
+            self._slot_reserved = [0] * self.slots
+            self._reserved_total = 0
         for k, r in enumerate(requests):  # validate up front: a bad request
             if len(r.prompt) > self.max_seq:  # must not abandon in-flight
                 raise ValueError(               # work
@@ -390,24 +612,50 @@ class ServingEngine:
                 raise ValueError("prompt must have at least one token")
             if r.max_new_tokens < 1:  # prefill always emits a first token
                 raise ValueError("max_new_tokens must be >= 1")
+            if self.paged and self.worst_case_pages(r) > self._pool.usable:
+                raise ValueError(
+                    f"request needs {self.worst_case_pages(r)} KV pages "
+                    f"worst-case but the pool only has {self._pool.usable}; "
+                    "raise kv_pages or shrink the request")
             # deterministic per-request default; normalize to int32 range
             r.seed = ((self.seed * 1000003 + k) if r.seed is None
                       else int(r.seed)) % _SEED_MOD
         queue = deque(requests)
         slots = [_Slot() for _ in range(self.slots)]
-        cache = transformer.init_cache(self.cfg, self.slots, self.max_seq,
-                                       self.cache_dtype)
+        if self.paged:
+            cache = transformer.init_paged_cache(
+                self.cfg, self.kv_pages, self.page_size, self.cache_dtype)
+        else:
+            cache = transformer.init_cache(self.cfg, self.slots,
+                                           self.max_seq, self.cache_dtype)
         pending: dict = {}  # slot index -> in-progress admission
         chunks_since_block = 0
+        deferred_head = None  # queue head already counted as deferred
         while queue or pending or any(s.active for s in slots):
             # wave-assign every free slot a queued request; all pending
             # admissions advance together, one chunk per wave dispatch.
             # mid-flight = an admission that starts while other lanes are
-            # live decoding.
+            # live decoding.  Paged mode admits FIFO under worst-case page
+            # reservation: sum of active reservations never exceeds the
+            # pool, so lazy page growth can't fail mid-flight.
             for i, s in enumerate(slots):
                 if not queue:
                     break
                 if not s.active and i not in pending:
+                    if self.paged:
+                        worst = self.worst_case_pages(queue[0])
+                        if self._reserved_total + worst > self._pool.usable:
+                            # count deferral EPISODES (once per starved
+                            # queue head), not loop iterations spent waiting
+                            if queue[0] is not deferred_head:
+                                self.stats["admissions_deferred_pages"] += 1
+                                deferred_head = queue[0]
+                            break  # page-starved: retry after lanes retire
+                        self._slot_reserved[i] = worst
+                        self._reserved_total += worst
+                        self.stats["kv_reserved_pages_peak"] = max(
+                            self.stats["kv_reserved_pages_peak"],
+                            self._reserved_total)
                     pending[i] = self._start_admission(i, queue.popleft())
                     if any(o.active for o in slots):
                         self.stats["mid_flight_admissions"] += 1
@@ -441,4 +689,14 @@ class ServingEngine:
             "ttft_p95_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
         })
+        if self.paged:
+            usable = self._pool.usable
+            st.update({
+                "kv_page_size": self.page_size,
+                "kv_pool_pages": usable,
+                "kv_pool_tokens": usable * self.page_size,
+                "kv_pool_util_peak": (st["kv_pages_peak"] / usable
+                                      if usable else 0.0),
+                "kv_pages_in_use": self._pool.used_pages,  # 0 after drain
+            })
         return requests

@@ -1,0 +1,385 @@
+"""Paged KV cache tests: pool + block-table storage contract end to end.
+
+The load-bearing claims:
+
+* paged decode attention and paged ``prefill_chunk`` are *token-identical*
+  to the contiguous path and the unbatched oracle — for mixed ragged
+  lengths, page sizes that do not divide ``max_seq``, and slots recycled
+  after free (stale page contents must never leak into a new owner);
+* the host-side free-list allocator + worst-case reservation gate keep the
+  pool consistent: lazy growth can never exhaust it mid-flight, and a
+  page-starved admission defers instead of failing;
+* KV memory scales with live tokens: a pool far smaller than
+  ``slots x max_seq`` serves the same workload with identical outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention, transformer
+from repro.models.layers import Ctx
+from repro.serving import Request, ServingEngine
+from repro.serving.engine import _PagePool
+
+
+def reference_decode(cfg, packed, ctx, prompt, max_new, max_seq):
+    """Unbatched greedy prefill + decode loop (the oracle)."""
+    cache = transformer.init_cache(cfg, 1, max_seq, jnp.bfloat16)
+    logits, cache = transformer.prefill_step(
+        cfg, packed, jnp.asarray(np.asarray(prompt, np.int32)[None]), ctx,
+        cache)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(max_new - 1):
+        logits, cache = transformer.decode_step(
+            cfg, packed, jnp.asarray([[toks[-1]]], jnp.int32), ctx, cache,
+            jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+        pos += 1
+    return toks
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    packed = transformer.pack_params(cfg, params)
+    ctx = Ctx(mode="packed", group_size=cfg.group_size,
+              attn_q_chunk=128, attn_kv_chunk=128)
+    return cfg, packed, ctx
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+def test_page_pool_allocator():
+    pool = _PagePool(6)
+    assert pool.usable == 5 and pool.free_pages == 5 and pool.used_pages == 0
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a  # null page never handed out
+    assert pool.used_pages == 3
+    pool.free(a[:2])
+    assert pool.free_pages == 4
+    b = pool.alloc(4)
+    assert 0 not in b and not set(b) & {a[2]}  # still-owned page not reissued
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(1)
+    with pytest.raises(ValueError):
+        _PagePool(1)  # no room for even the null page + one real page
+
+
+# ---------------------------------------------------------------------------
+# Storage primitives: scatter writes + gather reads
+# ---------------------------------------------------------------------------
+
+def test_paged_update_matches_contiguous_rows():
+    """Writing tokens through (block table, offset) and gathering the pages
+    back reproduces the contiguous row layout; masked rows and positions
+    past the table land in the null page only."""
+    b, t, kv_h, d, ps, n_pages = 3, 4, 2, 8, 4, 3
+    pool_pages = 1 + b * n_pages
+    key = jax.random.PRNGKey(0)
+    k_new = jax.random.normal(key, (b, t, kv_h, d), jnp.float32)
+    v_new = k_new * 2
+    bt = np.zeros((b, n_pages), np.int32)
+    ids = iter(range(1, pool_pages))
+    for i in range(b):
+        bt[i] = [next(ids) for _ in range(n_pages)]
+    kp = jnp.zeros((pool_pages, ps, kv_h, d))
+    vp = jnp.zeros((pool_pages, ps, kv_h, d))
+    pos = jnp.asarray([0, 3, 9], jnp.int32)  # row 1 straddles a page boundary
+    mask = jnp.asarray([True, True, False])
+    kp, vp = attention.paged_update_kv_cache(kp, vp, k_new, v_new,
+                                             jnp.asarray(bt), pos,
+                                             write_mask=mask)
+    gk = np.asarray(attention.gather_kv_pages(kp, jnp.asarray(bt)))
+    # contiguous reference: (b, S, kv_h, d) rows written at pos
+    ref = np.zeros((b, n_pages * ps, kv_h, d), np.float32)
+    for i in range(2):  # row 2 masked
+        ref[i, int(pos[i]):int(pos[i]) + t] = np.asarray(k_new)[i]
+    np.testing.assert_allclose(gk, ref.transpose(0, 2, 1, 3), atol=0, rtol=0)
+    # masked row's values went to the null page, not to its own pages
+    assert np.asarray(kp)[0].any()
+    assert not np.asarray(kp)[list(bt[2])].any()
+    # a position past the block table is routed to the null page too
+    kp2, _ = attention.paged_update_kv_cache(
+        kp, vp, k_new, v_new, jnp.asarray(bt),
+        jnp.asarray([n_pages * ps, 0, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(kp2)[list(bt[0])],
+                                  np.asarray(kp)[list(bt[0])])
+
+
+@pytest.mark.parametrize("page_size", [4, 5, 16])
+def test_paged_decode_attention_matches_ref(page_size):
+    """Paged decode attention (XLA gather + Pallas block-table kernel) ==
+    the contiguous oracle on the same logical rows, with shuffled page ids
+    and garbage in unowned pages."""
+    from repro.kernels.decode_attention import ops, ref
+    b, h, kv_h, d = 3, 4, 2, 8
+    lens = [7, 16, 2]
+    n_pages = -(-max(lens) // page_size)
+    pool_pages = 1 + b * n_pages
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, h, 1, d), jnp.float32)
+    # fill the WHOLE pool with garbage, then scatter real rows into owned
+    # pages — unowned/stale content must be invisible
+    kp = jax.random.normal(ks[1], (pool_pages, page_size, kv_h, d)) * 100
+    vp = jax.random.normal(ks[2], (pool_pages, page_size, kv_h, d)) * 100
+    rows_k = jax.random.normal(ks[1], (b, n_pages * page_size, kv_h, d))
+    rows_v = jax.random.normal(ks[2], (b, n_pages * page_size, kv_h, d))
+    perm = np.random.default_rng(0).permutation(np.arange(1, pool_pages))
+    bt = perm.reshape(b, n_pages).astype(np.int32)
+    for i in range(b):
+        for j in range(n_pages):
+            sl = rows_k[i, j * page_size:(j + 1) * page_size]
+            kp = kp.at[bt[i, j]].set(sl)
+            vp = vp.at[bt[i, j]].set(
+                rows_v[i, j * page_size:(j + 1) * page_size])
+    lens_j = jnp.asarray(lens, jnp.int32)
+    expect = ref.decode_attention_ref(q, rows_k.transpose(0, 2, 1, 3),
+                                      rows_v.transpose(0, 2, 1, 3), lens_j)
+    got_xla = attention.paged_decode_attention(q, kp, vp, jnp.asarray(bt),
+                                               lens_j, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+    got_pl = ops.decode_attention_paged(q, kp, vp, jnp.asarray(bt), lens_j)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+    # ref-vs-ref consistency of the paged oracle itself
+    got_ref = ref.paged_decode_attention_ref(q, kp, vp, jnp.asarray(bt),
+                                             lens_j)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_chunk_prefill_attention_matches_contiguous():
+    """Paged chunk-vs-prefix attention (XLA gather+overlay and the Pallas
+    two-phase block-table kernel) == the contiguous formulation on the same
+    logical rows, for ragged offsets."""
+    b, h, kv_h, t, d, ps = 3, 4, 2, 4, 8, 4
+    S = 16
+    n_pages = S // ps
+    pool_pages = 1 + b * n_pages
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (b, h, t, d), jnp.float32)
+    rows_k = jax.random.normal(ks[1], (b, kv_h, S, d), jnp.float32)
+    rows_v = jax.random.normal(ks[2], (b, kv_h, S, d), jnp.float32)
+    k_fresh = jax.random.normal(ks[3], (b, kv_h, t, d), jnp.float32)
+    v_fresh = jax.random.normal(ks[4], (b, kv_h, t, d), jnp.float32)
+    offs = jnp.asarray([0, 4, 8], jnp.int32)
+    # contiguous reference: rows with the fresh chunk overlaid at offsets
+    def overlay(row, new, off):
+        return jax.lax.dynamic_update_slice_in_dim(row, new, off, axis=1)
+    k_ref = jax.vmap(overlay)(rows_k, k_fresh, offs)
+    v_ref = jax.vmap(overlay)(rows_v, v_fresh, offs)
+    expect = attention.chunk_prefill_attention_xla(q, k_ref, v_ref, offs)
+    # scatter the rows into shuffled pool pages
+    perm = np.random.default_rng(1).permutation(np.arange(1, pool_pages))
+    bt = perm.reshape(b, n_pages).astype(np.int32)
+    kp = jnp.full((pool_pages, ps, kv_h, d), 99.0)
+    vp = jnp.full((pool_pages, ps, kv_h, d), -99.0)
+    for i in range(b):
+        for j in range(n_pages):
+            kp = kp.at[bt[i, j]].set(
+                rows_k[i, :, j * ps:(j + 1) * ps].transpose(1, 0, 2))
+            vp = vp.at[bt[i, j]].set(
+                rows_v[i, :, j * ps:(j + 1) * ps].transpose(1, 0, 2))
+    got_xla = attention.paged_chunk_prefill_attention(
+        q, kp, vp, jnp.asarray(bt), offs, k_fresh, v_fresh, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+    got_pl = attention.paged_chunk_prefill_attention(
+        q, kp, vp, jnp.asarray(bt), offs, k_fresh, v_fresh, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_chunk_matches_monolithic(served_model):
+    """Chunked paged prefill == whole-prompt contiguous prefill: same
+    last-token logits, and the gathered page prefix equals the contiguous
+    KV row (f32 cache: no chunk-boundary rounding)."""
+    cfg, packed, ctx = served_model
+    max_seq, slots, chunk, ps = 16, 3, 4, 4
+    n_pages = max_seq // ps
+    prompt = np.asarray([5, 4, 3, 2, 1, 6, 7, 8, 9, 2], np.int32)
+    plen = len(prompt)
+    exact_cache = transformer.init_cache(cfg, 1, max_seq, jnp.float32)
+    exact, exact_cache = transformer.prefill_step(
+        cfg, packed, jnp.asarray(prompt[None]), ctx, exact_cache)
+    cache = transformer.init_paged_cache(cfg, 1 + slots * n_pages, ps,
+                                         jnp.float32)
+    bt = np.zeros((slots, n_pages), np.int32)
+    bt[1] = [7, 3, 9, 5]  # slot 1 owns shuffled pages
+    logits = None
+    for lo in range(0, plen, chunk):
+        toks = np.zeros((slots, chunk), np.int32)
+        seg = prompt[lo:lo + chunk]
+        toks[1, :len(seg)] = seg
+        logits, cache = transformer.prefill_chunk(
+            cfg, packed, jnp.asarray(toks), ctx, cache,
+            offsets=np.asarray([0, lo, 0], np.int32),
+            admit_mask=np.asarray([False, True, False]),
+            last_index=np.asarray(
+                [0, min(plen - 1 - lo, chunk - 1), 0], np.int32),
+            page_table=jnp.asarray(bt))
+    np.testing.assert_allclose(np.asarray(logits)[1], np.asarray(exact)[0],
+                               atol=1e-4, rtol=1e-4)
+    gk = np.asarray(jax.vmap(
+        lambda kp: attention.gather_kv_pages(kp, jnp.asarray(bt)))(
+            cache["k"]))  # (L, slots, kv_h, S, hd)
+    np.testing.assert_allclose(
+        gk[:, 1, :, :plen].transpose(0, 2, 1, 3),
+        np.asarray(exact_cache["k"][:, 0, :plen]), atol=1e-4, rtol=1e-4)
+    # writes never touch pages outside the admitting slot's table: only
+    # slot 1's pages and the null page (masked rows' write sink) may be
+    # non-zero
+    untouched = [p for p in range(1, 1 + slots * n_pages)
+                 if p not in set(bt[1])]
+    assert not np.asarray(cache["k"])[:, untouched].any()
+
+
+# ---------------------------------------------------------------------------
+# Engine: token identity, slot recycling, pool accounting
+# ---------------------------------------------------------------------------
+
+def _mixed_requests():
+    prompts = [np.asarray([1, 2, 3, 4, 5], np.int32),
+               np.asarray([9, 8, 7], np.int32),
+               np.asarray([4, 4, 2, 1, 1, 3, 2, 5, 6, 1, 7, 2, 3], np.int32),
+               np.asarray([5, 1], np.int32)]
+    news = [6, 3, 7, 5]
+    return prompts, news
+
+
+@pytest.mark.parametrize("page_size", [4, 5, 16])
+def test_paged_engine_token_identical(served_model, page_size):
+    """Greedy outputs of the paged engine == contiguous engine == unbatched
+    oracle, for mixed ragged lengths, non-divisible page sizes (5 does not
+    divide max_seq=32) and slot reuse (4 requests, 3 slots)."""
+    cfg, packed, ctx = served_model
+    max_seq = 32
+    prompts, news = _mixed_requests()
+    reqs_c = [Request(prompt=p, max_new_tokens=n)
+              for p, n in zip(prompts, news)]
+    ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3, ctx=ctx,
+                  prefill_chunk=4, decode_block=8).run(reqs_c)
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3, ctx=ctx,
+                        prefill_chunk=4, decode_block=8, paged=True,
+                        page_size=page_size)
+    reqs_p = [Request(prompt=p, max_new_tokens=n)
+              for p, n in zip(prompts, news)]
+    eng.run(reqs_p)
+    for rc, rp, p in zip(reqs_c, reqs_p, prompts):
+        ref = reference_decode(cfg, packed, ctx, p, rp.max_new_tokens,
+                               max_seq)
+        np.testing.assert_array_equal(rp.output, np.asarray(ref, np.int32))
+        np.testing.assert_array_equal(rp.output, rc.output)
+    shapes = eng.compiled_shapes()
+    if shapes["prefill_chunk"] is not None:
+        # the O(1)-compile invariant survives paging: one static block-table
+        # width means one prefill and one decode program
+        assert shapes["prefill_chunk"] == 1 and shapes["decode_block"] == 1
+    st = eng.stats
+    assert st["kv_page_size"] == page_size
+    assert 0 < st["kv_pages_peak"] <= st["kv_pool_pages"]
+    assert st["kv_pages_in_use"] == 0  # everything returned after drain
+    # memory scales with live tokens, not slots * max_seq: the peak page
+    # footprint stays below the contiguous provisioning and covers at least
+    # the live-token peak
+    assert st["kv_pages_peak"] * page_size < 3 * max_seq
+    assert st["kv_pages_peak"] * page_size >= st["kv_live_tokens_peak"]
+
+
+def test_paged_slot_recycling_no_stale_leak(served_model):
+    """A pool sized far below slots*max_seq forces page recycling across
+    slot reuse; recycled pages hold the previous owner's KV, and outputs
+    must still match the oracle (stale content never attended)."""
+    cfg, packed, ctx = served_model
+    max_seq = 32
+    rng = np.random.default_rng(7)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab_size,
+                                        size=int(rng.integers(2, 12))),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for _ in range(6)]
+    # 2 slots, page_size 4: contiguous would need 16 pages; give 10 usable
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=2, ctx=ctx,
+                        prefill_chunk=4, decode_block=4, paged=True,
+                        page_size=4, kv_pages=11)
+    eng.run(reqs)
+    assert eng.stats["kv_pages_peak"] <= 10
+    for r in reqs:
+        ref = reference_decode(cfg, packed, ctx, r.prompt, r.max_new_tokens,
+                               max_seq)
+        np.testing.assert_array_equal(r.output, np.asarray(ref, np.int32))
+
+
+def test_paged_admission_defers_until_pages_free(served_model):
+    """When reservations would overflow the pool, admission defers (FIFO)
+    instead of failing, and every request still completes correctly."""
+    cfg, packed, ctx = served_model
+    max_seq = 32
+    prompts, news = _mixed_requests()
+    reqs = [Request(prompt=p, max_new_tokens=n)
+            for p, n in zip(prompts, news)]
+    # worst cases at ps=4: 3, 2, 5, 2 pages; 5 usable pages admit at most
+    # two small requests at a time and the big one only alone
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3, ctx=ctx,
+                        prefill_chunk=4, decode_block=4, paged=True,
+                        page_size=4, kv_pages=6)
+    eng.run(reqs)
+    assert eng.stats["admissions_deferred_pages"] > 0
+    assert eng.stats["kv_pages_peak"] <= 5
+    for r, p in zip(reqs, prompts):
+        ref = reference_decode(cfg, packed, ctx, p, r.max_new_tokens,
+                               max_seq)
+        np.testing.assert_array_equal(r.output, np.asarray(ref, np.int32))
+
+
+def test_paged_request_larger_than_pool_rejected(served_model):
+    cfg, packed, ctx = served_model
+    eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=1, ctx=ctx,
+                        paged=True, page_size=4, kv_pages=3)
+    with pytest.raises(ValueError, match="KV pages"):
+        eng.run([Request(prompt=np.arange(1, 12, dtype=np.int32),
+                         max_new_tokens=4)])
+
+
+def test_paged_requires_attention_blocks(served_model):
+    cfg, packed, ctx = served_model
+    ssm_cfg = get_config("xlstm-350m").reduced()
+    with pytest.raises(ValueError, match="attn"):
+        ServingEngine(ssm_cfg, packed, max_seq=16, batch_slots=1,
+                      paged=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: split-KV pad avoidance for non-divisible lengths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,n_splits",
+                         [(33, 4), (31, 4), (32, 4), (7, 7), (34, 8)])
+def test_splitk_non_divisible_lengths(s, n_splits):
+    """decode_attention_splitk handles KV lengths the split count does not
+    divide: a nearby divisor split is preferred (no tail pad) when it keeps
+    at least half the requested parallelism; otherwise (prime lengths,
+    degenerate divisors like 34 @ 8 splits) the tail pads + masks — results
+    match the oracle either way."""
+    from repro.kernels.decode_attention import ops, ref
+    b, h, kv_h, d = 2, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, h, 1, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv_h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv_h, s, d), jnp.float32)
+    lens = jnp.asarray([max(1, s // 2), s], jnp.int32)
+    expect = ref.decode_attention_ref(q, k, v, lens)
+    got = ops.decode_attention_splitk(q, k, v, lens, n_splits=n_splits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)

@@ -218,6 +218,35 @@ def test_shifted_final_chunk_non_divisible_chunk_size(served_model):
         np.testing.assert_array_equal(r.output, np.asarray(ref, np.int32))
 
 
+def test_parked_write_never_clobbers_live_token(served_model):
+    """The inactive-lane parking contract: a lane that fills its cache row
+    (``cache_len == max_seq``) goes inactive mid-block and its remaining
+    ticks park writes at the clamped row tail ``max_seq - 1`` — ON TOP of
+    its own last live token.  That is only safe because the lane is retired
+    at block end, before any dispatch could attend the clobbered entry (the
+    engine asserts this after every block).  Exercise exactly that window —
+    a row-filling request with ticks to spare inside its block, then a
+    reused slot — and require token-identical outputs throughout."""
+    cfg, packed, ctx = served_model
+    max_seq = 12
+    filler = Request(prompt=np.asarray([3, 1, 4, 1, 5], np.int32),
+                     max_new_tokens=20)   # caps at cache_len == max_seq
+    #                                       after 8 tokens, 7 ticks into an
+    #                                       8-tick block: the final tick
+    #                                       parks at max_seq - 1
+    reused = Request(prompt=np.asarray([2, 7, 1], np.int32),
+                     max_new_tokens=4)    # admitted into the freed slot
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=1, ctx=ctx,
+                        prefill_chunk=4, decode_block=8)
+    eng.run([filler, reused])
+    assert len(filler.output) == max_seq - len(filler.prompt) + 1
+    ref = reference_decode(cfg, packed, ctx, filler.prompt,
+                           len(filler.output), max_seq)
+    np.testing.assert_array_equal(filler.output, np.asarray(ref, np.int32))
+    ref2 = reference_decode(cfg, packed, ctx, reused.prompt, 4, max_seq)
+    np.testing.assert_array_equal(reused.output, np.asarray(ref2, np.int32))
+
+
 def test_sampling_reproducible_across_slots_and_schedules(served_model):
     """A sampled request's output depends only on its seed (keys are
     fold_in(PRNGKey(seed), emitted index)), not on which slot or tick
