@@ -12,7 +12,20 @@ count:
   * ``paged``    — the fused hot path over the paged KV cache (global page
     pool + per-slot block tables, ``--paged``): KV memory scales with live
     tokens, reported as pool utilization, live-token peak and the number of
-    slots schedulable at the contiguous configuration's KV budget.
+    slots schedulable at the contiguous configuration's KV budget;
+  * ``paged_shared`` — paged plus prefix sharing
+    (``enable_prefix_sharing=True``; runs when ``--shared-prefix-len N``
+    gives every prompt a common N-token template prefix): repeated
+    prefixes alias refcounted pages through the block tables instead of
+    being re-prefilled, reported as prefix hit rate, prefill tokens
+    skipped, pages shared, and tok/s / TTFT / pool-utilization deltas vs
+    plain paged.  NB the trade: the prefix-aware holdback serializes
+    followers behind the first donor's prefill, so on this CPU host —
+    where prefill is cheap relative to blocked decode — aggregate tok/s
+    and TTFT can REGRESS at low slot counts even as prefill compute and
+    the unique-page footprint drop (the deltas report all of it; the
+    wins grow with slot count and with real accelerator prefill cost,
+    which is the regime the paper's capacity argument targets).
 
 Mixed prompt/generation lengths stress mid-flight admission; the report
 separates aggregate tok/s from decode-only tok/s (prefill wall time
@@ -48,31 +61,42 @@ from repro.models import transformer
 from repro.serving import Request, ServingEngine
 
 
-def make_requests(rng, n, vocab, max_prompt, max_new):
+def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
     """Mixed workload: prompt lengths in [4, max_prompt], generation lengths
     in [max_new//2, max_new] — requests finish at different ticks, forcing
-    mid-flight admissions."""
+    mid-flight admissions.  With ``shared_prefix_len`` every prompt starts
+    with the same template prefix (the prompt-caching workload shape:
+    system prompt / few-shot header + per-request tail)."""
     lo = min(4, max_prompt)
-    return [
-        Request(prompt=rng.integers(0, vocab,
-                                    size=int(rng.integers(lo,
-                                                          max_prompt + 1))),
-                max_new_tokens=int(rng.integers(max(1, max_new // 2),
-                                                max_new + 1)))
-        for _ in range(n)
-    ]
+    tmpl = rng.integers(0, vocab, size=shared_prefix_len)
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.integers(lo, max_prompt + 1))
+        if shared_prefix_len:
+            tail = max(1, plen - shared_prefix_len)  # >= 1 divergent token
+            prompt = np.concatenate(
+                [tmpl, rng.integers(0, vocab, size=tail)]).astype(np.int64)
+        else:
+            prompt = rng.integers(0, vocab, size=plen)
+        reqs.append(Request(
+            prompt=prompt,
+            max_new_tokens=int(rng.integers(max(1, max_new // 2),
+                                            max_new + 1))))
+    return reqs
 
 
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             max_prompt, max_new, seed, mode, paged=False, page_size=16,
-            kv_pages=None):
+            kv_pages=None, shared_prefix_len=0, prefix_sharing=False):
     rng = np.random.default_rng(seed)
-    reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new)
-    max_seq = max_prompt + max_new
+    reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new,
+                         shared_prefix_len=shared_prefix_len)
+    max_seq = max(max_prompt, shared_prefix_len + 1) + max_new
     eng = ServingEngine(cfg, packed, max_seq=max_seq,
                         batch_slots=slots, decode_block=decode_block,
                         prefill_chunk=prefill_chunk, paged=paged,
-                        page_size=page_size, kv_pages=kv_pages)
+                        page_size=page_size, kv_pages=kv_pages,
+                        enable_prefix_sharing=prefix_sharing)
     # warmup: chunked prefill + fused decode compile O(1) shapes, so two
     # tiny requests cover every program the timed run can hit
     eng.run([Request(prompt=rng.integers(0, cfg.vocab_size, size=5),
@@ -127,6 +151,16 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             "mean_reserved_pages_per_request": mean_res,
             "schedulable_slots_contiguous": slots,
             "schedulable_slots_paged": int(budget_pages // mean_res),
+            # prefix-sharing gauges (zero when sharing is off — always
+            # present so the CI smoke can assert on the keys)
+            "prefix_hit_rate": s["prefix_hit_rate"],
+            "prefill_tokens_skipped": s["prefill_tokens_skipped"],
+            "kv_pages_shared": s["kv_pages_shared"],
+            "kv_pages_shared_peak": s["kv_pages_shared_peak"],
+            "kv_cow_splits": s["kv_cow_splits"],
+            "kv_prefix_cached_pages": s["kv_prefix_cached_pages"],
+            "prefix_evictions": s["prefix_evictions"],
+            "admissions_held_for_prefix": s["admissions_held_for_prefix"],
         })
     return out
 
@@ -154,6 +188,12 @@ def main():
                     help="paged mode: total pool pages incl. the null page "
                          "(default: full provisioning, "
                          "slots*ceil(max_seq/page_size)+1)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every prompt this common template prefix "
+                         "(the prompt-caching workload) and, with --paged, "
+                         "also run the prefix-sharing engine "
+                         "(enable_prefix_sharing=True) to report TTFT and "
+                         "pool-utilization deltas vs plain paged")
     ap.add_argument("--json", type=str, default=None,
                     help="write results to this JSON file")
     args = ap.parse_args()
@@ -163,9 +203,10 @@ def main():
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     packed = transformer.pack_params(cfg, params)
     common = dict(n_requests=args.n_requests, max_prompt=args.max_prompt,
-                  max_new=args.max_new, seed=args.seed)
+                  max_new=args.max_new, seed=args.seed,
+                  shared_prefix_len=args.shared_prefix_len)
 
-    rows, speedup, paged_vs_fused = [], {}, {}
+    rows, speedup, paged_vs_fused, sharing_deltas = [], {}, {}, {}
     cols = ("mode,slots,tok_s,decode_tok_s,slot_util,mid_flight,"
             "ttft_p50_ms,ttft_p95_ms,decode_blocks")
     print(cols)
@@ -189,6 +230,32 @@ def main():
                             kv_pages=args.kv_pages, **common)
             configs.append(paged)
             paged_vs_fused[str(slots)] = paged["tok_s"] / fused["tok_s"]
+            if args.shared_prefix_len:
+                shared = run_one(cfg, packed, slots=slots,
+                                 decode_block=args.decode_block,
+                                 prefill_chunk=args.prefill_chunk,
+                                 mode="paged_shared", paged=True,
+                                 page_size=args.page_size,
+                                 kv_pages=args.kv_pages,
+                                 prefix_sharing=True, **common)
+                configs.append(shared)
+                sharing_deltas[str(slots)] = {
+                    "tok_s_delta": shared["tok_s"] - paged["tok_s"],
+                    "decode_tok_s_delta":
+                        shared["decode_tok_s"] - paged["decode_tok_s"],
+                    "ttft_p50_ms_delta":
+                        shared["ttft_p50_ms"] - paged["ttft_p50_ms"],
+                    "ttft_p95_ms_delta":
+                        shared["ttft_p95_ms"] - paged["ttft_p95_ms"],
+                    "kv_pages_peak_delta":
+                        shared["kv_pages_peak"] - paged["kv_pages_peak"],
+                    "kv_pool_util_peak_delta":
+                        shared["kv_pool_util_peak"]
+                        - paged["kv_pool_util_peak"],
+                    "prefill_tokens_skipped":
+                        shared["prefill_tokens_skipped"],
+                    "prefix_hit_rate": shared["prefix_hit_rate"],
+                }
         for r in configs:
             rows.append(r)
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"
@@ -205,6 +272,15 @@ def main():
                   f"KV budget paged schedules "
                   f"{paged['schedulable_slots_paged']} slots vs "
                   f"{paged['schedulable_slots_contiguous']}")
+            if args.shared_prefix_len:
+                d = sharing_deltas[str(slots)]
+                print(f"# slots={slots}: prefix sharing skipped "
+                      f"{d['prefill_tokens_skipped']} prefill tokens "
+                      f"(hit rate {d['prefix_hit_rate']:.2f}); tok/s "
+                      f"{d['tok_s_delta']:+.0f}, TTFT p50 "
+                      f"{d['ttft_p50_ms_delta']:+.0f} ms, pages peak "
+                      f"{d['kv_pages_peak_delta']:+d}, pool util "
+                      f"{d['kv_pool_util_peak_delta']:+.2f} vs plain paged")
 
     if args.json:
         payload = {
@@ -217,6 +293,7 @@ def main():
             "results": rows,
             "speedup_fused_vs_per_tick": speedup,
             "speedup_paged_vs_fused": paged_vs_fused,
+            "prefix_sharing_deltas": sharing_deltas,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

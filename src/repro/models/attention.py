@@ -490,6 +490,22 @@ def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     return gather_pages_ref(pool, block_table)
 
 
+def copy_kv_page(pool: jax.Array, src, dst, *, page_axis: int = 0
+                 ) -> jax.Array:
+    """Copy page ``src`` onto page ``dst`` of a paged KV plane — the device
+    half of the serving engine's copy-on-write split: a slot granted a
+    partially shared boundary page receives a private copy (refcount 1) of
+    the donor page before its prefill writes into the page tail, so the
+    donor's readers never observe the write.  ``src``/``dst`` may be traced
+    scalars (one compiled program serves every split); every other page is
+    untouched."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=page_axis)
+    return jax.lax.dynamic_update_slice_in_dim(pool, page, dst,
+                                               axis=page_axis)
+
+
 def paged_update_kv_cache(k_pool: jax.Array, v_pool: jax.Array,
                           k_new: jax.Array, v_new: jax.Array,
                           block_table: jax.Array, pos,

@@ -237,6 +237,15 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def copy_paged_page(cache: dict, src, dst) -> dict:
+    """Copy pool page ``src`` onto ``dst`` across every layer and KV plane
+    of a paged cache (see ``attention.copy_kv_page``) — the serving
+    engine's copy-on-write split of a partially shared prefix page.  The
+    page axis is 1 (axis 0 is the stacked layer axis)."""
+    return {name: attention.copy_kv_page(pool, src, dst, page_axis=1)
+            for name, pool in cache.items()}
+
+
 # ---------------------------------------------------------------------------
 # Attention sub-layer (shared by attn and hymba blocks)
 # ---------------------------------------------------------------------------
@@ -653,7 +662,11 @@ def prefill_chunk(cfg: ModelConfig, params: dict, inputs: jax.Array, ctx: Ctx,
     ``init_paged_cache`` instead of contiguous rows: row i's chunk KV is
     scattered to ``(page_table[i, pos // page_size], pos % page_size)`` and
     the prefix is attended through the block table (masked rows' writes are
-    routed to the null page).
+    routed to the null page).  A row's FIRST chunk may sit at a nonzero
+    offset over a pre-populated table — the serving engine's prefix sharing
+    aliases cached prefix pages into the table and starts prefill at the
+    first divergent token; the attended ``[0, offset)`` prefix then streams
+    from pages this slot never wrote.
 
     Requires attention blocks — recurrent kinds (SSM/xLSTM) integrate every
     input token into their state, which cannot be resumed chunk-to-chunk

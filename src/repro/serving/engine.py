@@ -62,6 +62,51 @@ Device-side layout and kernels live in ``transformer.init_paged_cache``,
 ``attention.paged_*`` and the paged Pallas kernels in
 ``kernels/decode_attention`` / ``kernels/flash_prefill``.
 
+**Paged prefix sharing** (``enable_prefix_sharing=True``, paged mode only):
+templated workloads repeat long prompt prefixes, and a prefix's KV depends
+only on the prefix tokens and their absolute positions — so slots whose
+prompts share a prefix can read the *same* pages.  A host-side radix trie
+(``_PrefixIndex``, one node per fully written prompt page) maps an admitted
+prompt to its longest cached prefix; the engine grants those pages by
+aliasing block-table entries and bumping per-page refcounts, and chunked
+prefill starts at the first divergent token instead of 0.  When the share
+base lands mid-page, the boundary page is copy-on-write split: the slot
+gets a freshly allocated device copy and writes into the copy's tail.
+Admissions whose prompt prefix is being prefilled by a PENDING admission
+right now are held back until that donor completes (it registers its pages
+at completion) rather than prefilling the prefix twice.  Completed
+admissions register their full prompt pages in the trie, which takes one
+pool reference per page so cached prefixes outlive their slot; under
+capacity pressure (or the ``prefix_cache_pages`` cap) LRU trie leaves are
+evicted, freeing pages nobody else reads.
+
+Sharing invariants (load-bearing; the property tests in
+``tests/test_prefix_sharing.py`` exercise them):
+
+  * the null page 0 is never shared — the allocator never hands it out,
+    so it can never enter a grant or the index;
+  * a slot's writable frontier page always has refcount 1: granted pages
+    cover ``[0, base)`` with ``base`` page-interior only via the CoW copy
+    (exclusively owned), and registered pages are full prompt pages that
+    the slot never writes again — decode appends land at ``>= plen`` and
+    the inactive-lane park at flat ``max_seq`` resolves to the null page
+    or the final page's slack row, neither of which is ever registrable
+    (a registered page j satisfies ``(j+1)*page_size <= plen <= max_seq``);
+  * the share base is a ``prefill_chunk`` multiple, ``<= plen - 1`` and
+    ``<= max_seq - prefill_chunk`` — the sharer's own chunk schedule is
+    identical to the non-sharing engine's (greedy outputs are therefore
+    bit-identical, not merely argmax-stable), the shifted final chunk can
+    never rewrite a shared position, and positions a donor's own shifted
+    final chunk rewrote are never granted;
+  * admission is gated by ``reservations + legacy shared pages <= pool``:
+    a reservation counts only pages the slot may still *allocate* (its
+    worst case minus granted aliases; the CoW page is an allocation), and
+    pages kept alive by sharers after their allocator retired are added to
+    the gate — so lazy growth still can never fail mid-flight, while a
+    request that only fits because of shared pages admits instead of
+    deferring.  Index-only pages are invisible to the gate: they are
+    reclaimed on demand by LRU eviction when allocation runs dry.
+
 Slot state machine (host side, one ``_Slot`` per decode lane; bracketed
 steps are paged-mode only):
 
@@ -148,12 +193,19 @@ class _Slot:
 
 
 class _PagePool:
-    """Host-side free-list allocator over the global KV page pool.
+    """Host-side refcounted allocator over the global KV page pool.
 
     Page 0 is the reserved null page: it is never handed out, dead
     block-table entries point at it, and every device-side write without a
-    live target is routed into it.  The free list is LIFO so recently
-    retired (cache-hot) pages are reused first."""
+    live target is routed into it.  Pages are refcounted objects: ``alloc``
+    hands them out at refcount 1, prefix sharing adds one reference per
+    aliasing reader (a slot's block-table entry or the prefix index) via
+    ``incref``, and ``decref`` returns a page to the free list only when
+    its last reader drops — so ``used_pages`` counts every page exactly
+    once no matter how many readers alias it.  Dropping a reference the
+    caller does not hold (double free) and referencing a free page both
+    fail fast.  The free list is LIFO so recently retired (cache-hot)
+    pages are reused first."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -161,6 +213,7 @@ class _PagePool:
                              "reserved null page)")
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))
+        self._refs: dict = {}  # page id -> refcount >= 1 (absent = free)
 
     @property
     def usable(self) -> int:
@@ -172,17 +225,167 @@ class _PagePool:
 
     @property
     def used_pages(self) -> int:
+        """Unique pages in use — a page aliased by N readers counts once
+        (pool utilization must not be inflated by sharing)."""
         return self.usable - len(self._free)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently aliased by more than one reader."""
+        return sum(1 for c in self._refs.values() if c >= 2)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise RuntimeError(
                 f"KV page pool exhausted: asked {n}, have {len(self._free)} "
                 "(reservation-gated admission should make this unreachable)")
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._refs[p] = 1
+        return out
+
+    def incref(self, page: int) -> None:
+        if page not in self._refs:
+            raise RuntimeError(f"incref of free page {page}")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; the page is freed only when the last reader
+        drops (returns True then).  A page with live readers is never
+        returned to the free list."""
+        c = self._refs.get(page)
+        if c is None:
+            raise RuntimeError(f"double free of page {page}")
+        if c == 1:
+            del self._refs[page]
+            self._free.append(page)
+            return True
+        self._refs[page] = c - 1
+        return False
 
     def free(self, pages: List[int]) -> None:
-        self._free.extend(pages)
+        for p in pages:
+            self.decref(p)
+
+
+class _PrefixNode:
+    """One fully written KV page of a cached prompt prefix: ``key`` is the
+    page's ``page_size`` token ids, ``page`` the pool page holding that
+    span's KV.  A root-to-node path spells a cached prefix."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_use")
+
+    def __init__(self, key, page, parent):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict = {}
+        self.last_use = 0
+
+
+class _PrefixIndex:
+    """Host-side radix trie over cached prompt prefixes, page granularity.
+
+    Each node is one *fully written* prompt page; the engine takes one pool
+    reference per node, so cached pages outlive the slot that wrote them.
+    Partial trailing prompt pages are never indexed (their tail rows are
+    stale — and that exclusion is also what keeps decode appends and parked
+    writes out of every indexed page).  Eviction removes least-recently-used
+    leaves, so a cached prefix disappears tail-first; interior nodes become
+    leaves as their children go."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _PrefixNode(None, None, None)
+        self._clock = 0
+        self.n_pages = 0  # live node count == pages the index references
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def lookup(self, prompt) -> tuple:
+        """Longest cached prefix of ``prompt``: the chain of matched
+        full-page nodes plus, when the next page diverges mid-page, the
+        best partially matching child and its common-token count (the
+        copy-on-write donor).  Touches matched nodes for LRU."""
+        ps = self.page_size
+        now = self._tick()
+        node, chain = self.root, []
+        n_full = len(prompt) // ps
+        while len(chain) < n_full:
+            j = len(chain)
+            key = tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_use = now
+            chain.append(child)
+            node = child
+        rest = [int(t) for t in prompt[len(chain) * ps:]]
+        boundary, blcp = None, 0
+        for key, child in node.children.items():
+            lcp = 0
+            for a, b in zip(key, rest):
+                if a != b:
+                    break
+                lcp += 1
+            if lcp > blcp:
+                boundary, blcp = child, lcp
+        if boundary is not None:
+            boundary.last_use = now
+        return chain, boundary, blcp
+
+    def insert(self, prompt, pages) -> list:
+        """Index ``pages[j]`` as the KV of prompt page j.  Returns the NEW
+        nodes — the caller takes one pool reference per new node.  Groups
+        whose token content is already cached keep the original page (two
+        slots that prefilled the same prefix independently dedup to the
+        first registrant; the second's pages stay private to it)."""
+        ps = self.page_size
+        now = self._tick()
+        node, new = self.root, []
+        for j in range(len(pages)):
+            key = tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(key, pages[j], node)
+                node.children[key] = child
+                new.append(child)
+                self.n_pages += 1
+            child.last_use = now
+            node = child
+        return new
+
+    def evict_coldest(self, evictable, force: bool = False):
+        """Remove the least-recently-used leaf whose page satisfies
+        ``evictable(page)`` and return its page id (None when no candidate).
+        With ``force``, fall back to the coldest leaf regardless — dropping
+        the index reference of a still-pinned page frees no memory now but
+        unblocks its (index-only) ancestors for the next round, which is
+        what guarantees capacity-pressure eviction always makes progress.
+
+        The scan is O(nodes) per eviction — fine at current pool scales
+        (the index can never outgrow the page pool); switch to an
+        LRU-ordered leaf set if pools reach thousands of pages."""
+        for pred in ((evictable, lambda p: True) if force else (evictable,)):
+            best = None
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                if (node is not self.root and not node.children
+                        and pred(node.page)
+                        and (best is None or node.last_use < best.last_use)):
+                    best = node
+            if best is not None:
+                del best.parent.children[best.key]
+                self.n_pages -= 1
+                return best.page
+        return None
 
 
 class ServingEngine:
@@ -191,7 +394,9 @@ class ServingEngine:
                  seed: int = 0, prefill_chunk: int = 32,
                  decode_block: int = 8, cache_dtype=jnp.bfloat16,
                  paged: bool = False, page_size: int = 16,
-                 kv_pages: Optional[int] = None):
+                 kv_pages: Optional[int] = None,
+                 enable_prefix_sharing: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
@@ -214,6 +419,17 @@ class ServingEngine:
             self.page_size = None
             self.pages_per_slot = 0
             self.kv_pages = 0
+        self.enable_prefix_sharing = bool(enable_prefix_sharing)
+        if self.enable_prefix_sharing and not self.paged:
+            raise ValueError("enable_prefix_sharing requires paged=True "
+                             "(prefix reuse aliases KV pool pages through "
+                             "the block table)")
+        if prefix_cache_pages is not None and int(prefix_cache_pages) < 0:
+            raise ValueError("prefix_cache_pages must be >= 0 (or None for "
+                             "unbounded caching under pool pressure)")
+        self.prefix_cache_pages = (None if prefix_cache_pages is None
+                                   else int(prefix_cache_pages))
+        self._prefix = None  # built per run() when sharing is enabled
         # any chunk size <= max_seq works: a final chunk that would run past
         # the end of its cache row is shifted back to end exactly at
         # max_seq (its leading overlap rewrites positions the previous
@@ -336,6 +552,14 @@ class ServingEngine:
                                             cache, lengths=lengths)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
+        def _cow_copy_page(cache, src, dst):
+            """Copy-on-write split: duplicate pool page ``src`` onto the
+            freshly allocated ``dst`` (all layers, K and V planes) so the
+            new owner can write into the page tail without disturbing the
+            donor's readers.  src/dst are traced — one compiled program."""
+            return transformer.copy_paged_page(cache, src, dst)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
         def _adopt(cache, one_cache, slot):
             def write(full, new):
                 start = (0, slot) + (0,) * (full.ndim - 2)
@@ -348,6 +572,7 @@ class ServingEngine:
         self._decode_block = _decode_block
         self._prefill_full = _prefill_full
         self._adopt = _adopt
+        self._cow_copy_page = _cow_copy_page
 
     def compiled_shapes(self) -> dict:
         """Live jit-cache entry counts (the O(1)-compile invariant; holds
@@ -377,34 +602,222 @@ class ServingEngine:
         total = min(len(req.prompt) + req.max_new_tokens - 1, self.max_seq)
         return -(-total // self.page_size)
 
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Pool alloc with capacity-pressure eviction: when the free list
+        cannot cover ``n``, LRU cached-prefix leaves are evicted first
+        (pages nobody else reads free immediately; still-pinned leaves
+        merely drop their index reference, unblocking index-only ancestors
+        for the next round).  The admission gate guarantees this always
+        finds enough pages (see the prefix-sharing invariants in the class
+        docstring)."""
+        if self._prefix is not None:
+            while self._pool.free_pages < n and self._evict_one_prefix():
+                pass
+        out = self._pool.alloc(n)
+        st = self.stats
+        st["kv_pages_peak"] = max(st["kv_pages_peak"], self._pool.used_pages)
+        return out
+
+    def _own_page(self, i: int, pid: int, j: int) -> None:
+        """Install a freshly allocated page (refcount 1: this slot alone —
+        the writable-frontier invariant) at block-table position j of
+        slot i."""
+        self._bt[i, j] = pid
+        self._slot_pages[i].append(pid)
+        self._page_slot_refs[pid] = self._page_slot_refs.get(pid, 0) + 1
+        self._backed.add(pid)
+        self._bt_dev = None  # host table changed: re-upload on next dispatch
+
     def _grow_pages(self, i: int, upto_tokens: int) -> None:
         """Lazily extend slot i's page list to cover flat positions
-        [0, upto_tokens).  Never exceeds the slot's admission reservation,
-        so the pool can't run dry mid-flight."""
+        [0, upto_tokens).  Pre-granted shared pages count toward coverage;
+        growth never exceeds the slot's admission reservation (which
+        excludes them), so the pool can't run dry mid-flight."""
         need = -(-upto_tokens // self.page_size)
         pages = self._slot_pages[i]
         if need <= len(pages):
             return
-        new = self._pool.alloc(need - len(pages))
+        new = self._alloc_pages(need - len(pages))
         for j, pid in enumerate(new, start=len(pages)):
-            self._bt[i, j] = pid
-        pages.extend(new)
-        self._bt_dev = None  # host table changed: re-upload on next dispatch
-        st = self.stats
-        st["kv_pages_peak"] = max(st["kv_pages_peak"], self._pool.used_pages)
+            self._own_page(i, pid, j)
+
+    def _pinned_unreserved(self) -> int:
+        """Unique pages kept alive by slot references but not covered by
+        any active slot's reservation: their allocating slot retired while
+        sharers (and possibly the index) still read them.  The admission
+        gate adds this to the reservation sum so legacy shared pages can
+        never starve lazy growth."""
+        return sum(1 for p in self._page_slot_refs
+                   if p not in self._backed)
 
     def _free_slot(self, slots, i: int) -> None:
-        """Retire slot i: emit its output and (paged) return its pages and
-        reservation, zeroing its block-table row so later writes by the dead
-        lane land in the null page."""
+        """Retire slot i: emit its output, drop one reference per page it
+        reads (shared prefix pages survive while the index or other slots
+        still read them; exclusively owned pages return to the free list),
+        return its reservation, and zero its block-table row so later
+        writes by the dead lane land in the null page."""
         if self.paged:
-            self._pool.free(self._slot_pages[i])
-            self._slot_pages[i] = []
+            # detach the slot's bookkeeping before dropping any reference,
+            # so the pool and block tables always agree
+            pages, self._slot_pages[i] = self._slot_pages[i], []
+            shared_n = self._slot_shared_n[i]
+            self._slot_shared_n[i] = 0
             self._reserved_total -= self._slot_reserved[i]
             self._slot_reserved[i] = 0
             self._bt[i, :] = 0
             self._bt_dev = None
+            for j, p in enumerate(pages):
+                if j >= shared_n:
+                    self._backed.discard(p)
+                self._page_slot_refs[p] -= 1
+                if not self._page_slot_refs[p]:
+                    del self._page_slot_refs[p]
+                self._pool.decref(p)
+            if self._prefix is not None and self.prefix_cache_pages is not None:
+                # pages this slot pinned may have just become index-only
+                self._enforce_prefix_cap()
         slots[i].free()
+
+    # -- prefix sharing (host side) ----------------------------------------
+
+    def _prefix_lookup(self, req: Request) -> dict:
+        """Map a prompt to its longest cached prefix, clamped to the
+        engine's sharing granularity.  The share base is
+
+          * a multiple of ``prefill_chunk`` — the sharer's own chunk
+            schedule (and therefore its arithmetic) is then identical to
+            the non-sharing engine's, so outputs are bit-identical, and
+            the clamp below keeps every shared position out of reach of
+            the shifted final chunk;
+          * at most ``max_seq - prefill_chunk`` — a shifted final chunk
+            can then never rewrite a shared position (and positions a
+            donor's own shifted chunk rewrote are never granted);
+          * at most ``plen - 1`` — the last prompt token always runs
+            through prefill (its logits produce the first sampled token).
+
+        Returns the full pages to alias plus, when the base lands
+        mid-page, the donor page to copy-on-write split."""
+        chain, boundary, blcp = self._prefix.lookup(req.prompt)
+        ps, c = self.page_size, self.prefill_chunk
+        base = min(len(chain) * ps + blcp, len(req.prompt) - 1,
+                   self.max_seq - c)
+        base -= base % c
+        n_full, cow = divmod(base, ps)
+        cow_src = None
+        if cow:
+            cow_src = (chain[n_full].page if n_full < len(chain)
+                       else boundary.page)
+        return {"base": base, "pages": [n.page for n in chain[:n_full]],
+                "cow_src": cow_src}
+
+    def _held_for_pending_prefix(self, req: Request, pending: dict,
+                                 have: int) -> bool:
+        """Prefix-aware admission holdback: when the queue head would share
+        more full pages with a PENDING admission's prompt than the index
+        can grant right now (``have``, the head's current lookup base),
+        wait for that donor to finish (it registers its pages on
+        completion) instead of prefilling the common prefix twice.  Donors
+        always finish in finitely many waves, so the head is never held
+        forever."""
+        if self._prefix is None or not pending:
+            return False
+        ps, c = self.page_size, self.prefill_chunk
+        for admit in pending.values():
+            donor = admit["req"].prompt
+            lcp = 0
+            for a, b in zip(donor, req.prompt):
+                if int(a) != int(b):
+                    break
+                lcp += 1
+            # the donor will index floor(donor_plen / ps) full pages; apply
+            # the same clamps _prefix_lookup would
+            pot = min((lcp // ps) * ps, (len(donor) // ps) * ps,
+                      len(req.prompt) - 1, self.max_seq - c)
+            pot -= pot % c
+            if pot >= ps and pot > have:
+                return True
+        return False
+
+    def _grant_prefix(self, cache, i: int, grant: dict):
+        """Alias the granted prefix pages into slot i's block table (one
+        pool reference per aliased page) and, when the base lands mid-page,
+        allocate + device-copy the boundary page (CoW split) so the slot's
+        writable frontier is exclusively owned.  Aliased pages are
+        referenced BEFORE any allocation so capacity-pressure eviction can
+        never reclaim them in between."""
+        st = self.stats
+        for j, p in enumerate(grant["pages"]):
+            self._pool.incref(p)
+            self._page_slot_refs[p] = self._page_slot_refs.get(p, 0) + 1
+            self._slot_pages[i].append(p)
+            self._bt[i, j] = p
+        self._slot_shared_n[i] = len(grant["pages"])
+        self._bt_dev = None
+        if grant["cow_src"] is not None:
+            # pin the donor page across the allocation AND the copy:
+            # _alloc_pages may force-evict LRU leaves, and an index-only
+            # cow_src could otherwise be freed and handed straight back
+            # as dst (or freed before the device copy reads it)
+            self._pool.incref(grant["cow_src"])
+            try:
+                (dst,) = self._alloc_pages(1)
+                self._own_page(i, dst, len(grant["pages"]))
+                cache = self._cow_copy_page(
+                    cache, jnp.asarray(grant["cow_src"], jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+            finally:
+                self._pool.decref(grant["cow_src"])
+            st["kv_cow_splits"] += 1
+        st["prefix_hits"] += 1
+        st["prefill_tokens_skipped"] += grant["base"]
+        st["kv_pages_shared"] += len(grant["pages"])
+        st["kv_pages_shared_peak"] = max(st["kv_pages_shared_peak"],
+                                         self._pool.shared_pages)
+        return cache
+
+    def _register_prefix(self, i: int, req: Request, plen: int) -> None:
+        """Index the admitting slot's fully written prompt pages so later
+        admissions can alias them.  Only pages entirely covered by the
+        prompt are indexed — partial tails are stale, and the exclusion is
+        what keeps decode appends and parked writes out of every indexed
+        page.  New nodes take one pool reference each: the cached prefix
+        outlives the slot."""
+        m = plen // self.page_size
+        if not m:
+            return
+        new = self._prefix.insert(req.prompt, self._slot_pages[i][:m])
+        for node in new:
+            self._pool.incref(node.page)
+        if new and self.prefix_cache_pages is not None:
+            self._enforce_prefix_cap()
+
+    def _evict_one_prefix(self) -> bool:
+        page = self._prefix.evict_coldest(
+            lambda p: self._pool.refcount(p) == 1, force=True)
+        if page is None:
+            return False
+        self._pool.decref(page)  # frees it iff the index was the last reader
+        self.stats["prefix_evictions"] += 1
+        return True
+
+    def _enforce_prefix_cap(self) -> None:
+        """Best-effort bound on pages the index keeps alive beyond live
+        slots (the ``prefix_cache_pages`` knob); pages still pinned by
+        slots can block a full sweep, so the loop stops when eviction
+        makes no progress."""
+        while self._index_only_pages() > self.prefix_cache_pages:
+            if not self._evict_one_prefix():
+                break
+
+    def _index_only_pages(self) -> int:
+        n = 0
+        stack = [self._prefix.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node.page is not None and self._pool.refcount(node.page) == 1:
+                n += 1
+        return n
 
     def _bt_device(self):
         """Device block table at its full static width (pages_per_slot),
@@ -425,14 +838,17 @@ class ServingEngine:
 
     # -- admission (chunked, in-place, batched across slots) ---------------
 
-    def _start_admission(self, slot_idx: int, req: Request) -> dict:
+    def _start_admission(self, slot_idx: int, req: Request,
+                         base: int = 0) -> dict:
         plen = len(req.prompt)  # <= max_seq, validated up front in run()
         if self._chunked:
-            n_chunks = -(-plen // self.prefill_chunk)
+            # chunked prefill covers [base, plen): the shared prefix
+            # [0, base) is already in granted pages and is skipped
+            n_chunks = -(-(plen - base) // self.prefill_chunk)
         else:
             n_chunks = 1
         return {"slot": slot_idx, "req": req, "plen": plen, "next": 0,
-                "n_chunks": n_chunks}
+                "n_chunks": n_chunks, "base": base}
 
     def _first_token(self, logits, req: Request) -> int:
         return int(np.asarray(self._sample_tokens(
@@ -449,6 +865,11 @@ class ServingEngine:
         s.cache_len = admit["plen"]
         s.last_token = tok
         self.stats["admissions"] += 1
+        if self._prefix is not None:
+            # the prompt's full pages are now all written: make them
+            # reusable (before any potential immediate retirement, so a
+            # prefill-only request still seeds the cache)
+            self._register_prefix(i, req, admit["plen"])
         # request finished at prefill (max_new == 1 or full cache)
         if len(s.tokens) >= req.max_new_tokens or s.cache_len >= self.max_seq:
             self._free_slot(slots, i)
@@ -484,8 +905,11 @@ class ServingEngine:
         completing = []
         for i, admit in pending.items():
             req, plen = admit["req"], admit["plen"]
-            # shifted final chunk: never write past the cache row end
-            lo = min(admit["next"] * c, self.max_seq - c)
+            # shifted final chunk: never write past the cache row end.  A
+            # shared-prefix admission starts at its base; the shift can
+            # never cross below it (base <= max_seq - c by the lookup
+            # clamp), so shared pages are never rewritten.
+            lo = min(admit["base"] + admit["next"] * c, self.max_seq - c)
             seg = req.prompt[lo:lo + c]
             toks[i, :len(seg)] = seg
             offs[i] = lo
@@ -595,12 +1019,26 @@ class ServingEngine:
         if self.paged:
             self.stats.update({"kv_pages_peak": 0, "kv_live_tokens_peak": 0,
                                "kv_reserved_pages_peak": 0,
-                               "admissions_deferred_pages": 0})
+                               "admissions_deferred_pages": 0,
+                               # prefix-sharing gauges (always present in
+                               # paged mode; zero when sharing is off)
+                               "prefix_hits": 0,
+                               "prefill_tokens_skipped": 0,
+                               "kv_pages_shared": 0,
+                               "kv_pages_shared_peak": 0,
+                               "kv_cow_splits": 0,
+                               "prefix_evictions": 0,
+                               "admissions_held_for_prefix": 0})
             self._pool = _PagePool(self.kv_pages)
+            self._prefix = (_PrefixIndex(self.page_size)
+                            if self.enable_prefix_sharing else None)
             self._bt = np.zeros((self.slots, self.pages_per_slot), np.int32)
             self._bt_dev = None  # cached device copy of self._bt
             self._slot_pages: List[List[int]] = [[] for _ in
                                                  range(self.slots)]
+            self._slot_shared_n = [0] * self.slots
+            self._page_slot_refs: dict = {}  # page -> live slot references
+            self._backed: set = set()  # pages inside an active reservation
             self._slot_reserved = [0] * self.slots
             self._reserved_total = 0
         for k, r in enumerate(requests):  # validate up front: a bad request
@@ -610,6 +1048,15 @@ class ServingEngine:
                     f"{self.max_seq}")
             if len(r.prompt) < 1:
                 raise ValueError("prompt must have at least one token")
+            if self.cfg.frontend == "token" and (
+                    int(np.min(r.prompt)) < 0
+                    or int(np.max(r.prompt)) >= self.cfg.vocab_size):
+                # out-of-vocab ids make jnp.take fill NaN embeddings; the
+                # lane's KV writes (including null-page parks) then poison
+                # OTHER lanes through masked-position 0*NaN — reject loudly
+                # instead of corrupting outputs schedule-dependently
+                raise ValueError(
+                    f"prompt token ids must be in [0, {self.cfg.vocab_size})")
             if r.max_new_tokens < 1:  # prefill always emits a first token
                 raise ValueError("max_new_tokens must be >= 1")
             if self.paged and self.worst_case_pages(r) > self._pool.usable:
@@ -631,32 +1078,68 @@ class ServingEngine:
         pending: dict = {}  # slot index -> in-progress admission
         chunks_since_block = 0
         deferred_head = None  # queue head already counted as deferred
+        held_head = None      # queue head already counted as held
         while queue or pending or any(s.active for s in slots):
             # wave-assign every free slot a queued request; all pending
             # admissions advance together, one chunk per wave dispatch.
             # mid-flight = an admission that starts while other lanes are
             # live decoding.  Paged mode admits FIFO under worst-case page
-            # reservation: sum of active reservations never exceeds the
+            # reservation (discounted by granted shared pages): the
+            # reservation sum plus legacy shared pages never exceeds the
             # pool, so lazy page growth can't fail mid-flight.
             for i, s in enumerate(slots):
                 if not queue:
                     break
                 if not s.active and i not in pending:
+                    head = queue[0]
+                    grant = None
                     if self.paged:
-                        worst = self.worst_case_pages(queue[0])
-                        if self._reserved_total + worst > self._pool.usable:
+                        if self._prefix is not None:
+                            grant = self._prefix_lookup(head)
+                        if self._held_for_pending_prefix(
+                                head, pending,
+                                grant["base"] if grant else 0):
+                            # a pending admission is prefilling this head's
+                            # prefix right now: wait for it to register its
+                            # pages rather than prefill the prefix twice
+                            # (counted once per held head, like deferrals)
+                            if head is not held_head:
+                                self.stats["admissions_held_for_prefix"] += 1
+                                held_head = head
+                            break
+                        worst = self.worst_case_pages(head)
+                        # reservation = pages this slot may ALLOCATE:
+                        # aliased prefix pages are discounted (they already
+                        # exist); the CoW boundary page is not (it is a
+                        # fresh allocation the reservation must cover)
+                        reserve = worst - (len(grant["pages"]) if grant
+                                           else 0)
+                        # granting converts index-only pages (evictable)
+                        # into slot-pinned ones — account for them like
+                        # legacy shared pages
+                        newly_pinned = (sum(
+                            1 for p in grant["pages"]
+                            if p not in self._page_slot_refs)
+                            if grant else 0)
+                        if (self._reserved_total + self._pinned_unreserved()
+                                + newly_pinned + reserve
+                                > self._pool.usable):
                             # count deferral EPISODES (once per starved
                             # queue head), not loop iterations spent waiting
-                            if queue[0] is not deferred_head:
+                            if head is not deferred_head:
                                 self.stats["admissions_deferred_pages"] += 1
-                                deferred_head = queue[0]
+                                deferred_head = head
                             break  # page-starved: retry after lanes retire
-                        self._slot_reserved[i] = worst
-                        self._reserved_total += worst
+                        self._slot_reserved[i] = reserve
+                        self._reserved_total += reserve
                         self.stats["kv_reserved_pages_peak"] = max(
                             self.stats["kv_reserved_pages_peak"],
                             self._reserved_total)
-                    pending[i] = self._start_admission(i, queue.popleft())
+                        if grant is not None and grant["base"]:
+                            cache = self._grant_prefix(cache, i, grant)
+                    pending[i] = self._start_admission(
+                        i, queue.popleft(),
+                        base=grant["base"] if grant else 0)
                     if any(o.active for o in slots):
                         self.stats["mid_flight_admissions"] += 1
             # one batched prefill wave — in-flight lanes stall for at most
@@ -697,6 +1180,13 @@ class ServingEngine:
                 "kv_pool_tokens": usable * self.page_size,
                 "kv_pool_util_peak": (st["kv_pages_peak"] / usable
                                       if usable else 0.0),
-                "kv_pages_in_use": self._pool.used_pages,  # 0 after drain
+                # after drain only the prefix cache still holds pages (0
+                # without sharing); each is counted once however many
+                # readers it had
+                "kv_pages_in_use": self._pool.used_pages,
+                "kv_prefix_cached_pages": (self._prefix.n_pages
+                                           if self._prefix else 0),
+                "prefix_hit_rate": (st["prefix_hits"] / st["admissions"]
+                                    if st["admissions"] else 0.0),
             })
         return requests
