@@ -26,6 +26,19 @@ count:
     the unique-page footprint drop (the deltas report all of it; the
     wins grow with slot count and with real accelerator prefill cost,
     which is the regime the paper's capacity argument targets).
+  * ``*_device`` — with ``--device-sched``, each of the above reruns with
+    the device-resident scheduler: slot bookkeeping lives in device arrays
+    threaded block-to-block and the host reads results one block behind,
+    so steady-state blocks dispatch with zero host round-trips.  Every row
+    reports ``host_syncs_per_block`` (gating readbacks per dispatched
+    block) and ``steady_state_syncs_per_block`` (the same count restricted
+    to steady-state intervals — 1.0 host-driven, 0.0 device-resident).
+    NB the same CPU-host caveat as prefix sharing: with interpret-mode
+    kernels and zero real dispatch latency there is nothing to hide, while
+    the one-block-behind pipeline pays up to one extra fully-masked block
+    per retiring lane — so tok/s can regress here even as the sync count
+    drops to zero.  The sync columns are the claim; the tok/s win needs an
+    accelerator whose dispatch+readback latency is comparable to a block.
 
 Mixed prompt/generation lengths stress mid-flight admission; the report
 separates aggregate tok/s from decode-only tok/s (prefill wall time
@@ -87,7 +100,8 @@ def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
 
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             max_prompt, max_new, seed, mode, paged=False, page_size=16,
-            kv_pages=None, shared_prefix_len=0, prefix_sharing=False):
+            kv_pages=None, shared_prefix_len=0, prefix_sharing=False,
+            device_sched=False):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new,
                          shared_prefix_len=shared_prefix_len)
@@ -96,7 +110,8 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
                         batch_slots=slots, decode_block=decode_block,
                         prefill_chunk=prefill_chunk, paged=paged,
                         page_size=page_size, kv_pages=kv_pages,
-                        enable_prefix_sharing=prefix_sharing)
+                        enable_prefix_sharing=prefix_sharing,
+                        device_sched=device_sched)
     # warmup: chunked prefill + fused decode compile O(1) shapes, so two
     # tiny requests cover every program the timed run can hit
     eng.run([Request(prompt=rng.integers(0, cfg.vocab_size, size=5),
@@ -126,6 +141,16 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         "ttft_p50_ms": float(np.percentile(ttfts, 50)) * 1e3,
         "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
         "ttft_p95_ms": float(np.percentile(ttfts, 95)) * 1e3,
+        # host-sync accounting (the device-resident scheduler's headline
+        # metric): gating readbacks per dispatched block, plus the count
+        # restricted to steady-state intervals (no admission/retire between
+        # consecutive dispatches) — 1.0 for the host-driven engine, 0.0 for
+        # the device-resident one
+        "device_sched": device_sched,
+        "host_block_syncs": s["host_block_syncs"],
+        "host_syncs_per_block": s["host_syncs_per_block"],
+        "steady_state_blocks": s["steady_state_blocks"],
+        "steady_state_syncs_per_block": s["steady_state_syncs_per_block"],
     }
     if paged:
         # schedulable slots at the contiguous configuration's KV budget:
@@ -194,6 +219,12 @@ def main():
                          "also run the prefix-sharing engine "
                          "(enable_prefix_sharing=True) to report TTFT and "
                          "pool-utilization deltas vs plain paged")
+    ap.add_argument("--device-sched", action="store_true",
+                    help="also run each configuration with the device-"
+                         "resident scheduler (slot bookkeeping threaded "
+                         "through device arrays, one-block-behind host "
+                         "readback; modes suffixed _device) and report the "
+                         "per-block host-sync counts next to tok/s")
     ap.add_argument("--json", type=str, default=None,
                     help="write results to this JSON file")
     args = ap.parse_args()
@@ -207,8 +238,9 @@ def main():
                   shared_prefix_len=args.shared_prefix_len)
 
     rows, speedup, paged_vs_fused, sharing_deltas = [], {}, {}, {}
+    device_vs_host = {}
     cols = ("mode,slots,tok_s,decode_tok_s,slot_util,mid_flight,"
-            "ttft_p50_ms,ttft_p95_ms,decode_blocks")
+            "ttft_p50_ms,ttft_p95_ms,decode_blocks,host_syncs_blk")
     print(cols)
     for slots in args.slots:
         fused = run_one(cfg, packed, slots=slots,
@@ -216,6 +248,15 @@ def main():
                         prefill_chunk=args.prefill_chunk, mode="fused",
                         **common)
         configs = [fused]
+        if args.device_sched:
+            fused_dev = run_one(cfg, packed, slots=slots,
+                                decode_block=args.decode_block,
+                                prefill_chunk=args.prefill_chunk,
+                                mode="fused_device", device_sched=True,
+                                **common)
+            configs.append(fused_dev)
+            device_vs_host[str(slots)] = {
+                "fused": fused_dev["tok_s"] / fused["tok_s"]}
         if not args.skip_baseline:
             per_tick = run_one(cfg, packed, slots=slots, decode_block=1,
                                prefill_chunk=args.max_prompt + args.max_new,
@@ -230,6 +271,17 @@ def main():
                             kv_pages=args.kv_pages, **common)
             configs.append(paged)
             paged_vs_fused[str(slots)] = paged["tok_s"] / fused["tok_s"]
+            if args.device_sched:
+                paged_dev = run_one(cfg, packed, slots=slots,
+                                    decode_block=args.decode_block,
+                                    prefill_chunk=args.prefill_chunk,
+                                    mode="paged_device", paged=True,
+                                    page_size=args.page_size,
+                                    kv_pages=args.kv_pages,
+                                    device_sched=True, **common)
+                configs.append(paged_dev)
+                device_vs_host[str(slots)]["paged"] = (
+                    paged_dev["tok_s"] / paged["tok_s"])
             if args.shared_prefix_len:
                 shared = run_one(cfg, packed, slots=slots,
                                  decode_block=args.decode_block,
@@ -239,6 +291,19 @@ def main():
                                  kv_pages=args.kv_pages,
                                  prefix_sharing=True, **common)
                 configs.append(shared)
+                if args.device_sched:
+                    shared_dev = run_one(cfg, packed, slots=slots,
+                                         decode_block=args.decode_block,
+                                         prefill_chunk=args.prefill_chunk,
+                                         mode="paged_shared_device",
+                                         paged=True,
+                                         page_size=args.page_size,
+                                         kv_pages=args.kv_pages,
+                                         prefix_sharing=True,
+                                         device_sched=True, **common)
+                    configs.append(shared_dev)
+                    device_vs_host[str(slots)]["paged_shared"] = (
+                        shared_dev["tok_s"] / shared["tok_s"])
                 sharing_deltas[str(slots)] = {
                     "tok_s_delta": shared["tok_s"] - paged["tok_s"],
                     "decode_tok_s_delta":
@@ -261,7 +326,13 @@ def main():
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"
                   f"{r['decode_tok_s']:.1f},{r['slot_util']:.2f},"
                   f"{r['mid_flight']},{r['ttft_p50_ms']:.0f},"
-                  f"{r['ttft_p95_ms']:.0f},{r['decode_blocks']}")
+                  f"{r['ttft_p95_ms']:.0f},{r['decode_blocks']},"
+                  f"{r['host_syncs_per_block']:.2f}")
+        if args.device_sched:
+            dv = device_vs_host[str(slots)]
+            pairs = ", ".join(f"{k} {v:.2f}x" for k, v in dv.items())
+            print(f"# slots={slots}: device-resident scheduler tok/s vs "
+                  f"host-driven: {pairs}")
         if str(slots) in speedup:
             print(f"# slots={slots}: fused vs per-tick speedup "
                   f"{speedup[str(slots)]:.2f}x")
@@ -293,6 +364,7 @@ def main():
             "results": rows,
             "speedup_fused_vs_per_tick": speedup,
             "speedup_paged_vs_fused": paged_vs_fused,
+            "speedup_device_vs_host_sched": device_vs_host,
             "prefix_sharing_deltas": sharing_deltas,
         }
         with open(args.json, "w") as f:

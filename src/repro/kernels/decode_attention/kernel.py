@@ -165,6 +165,64 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_quant_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                               vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                               scale: float, page_size: int):
+    """Paged decode over an int8 KV pool with per-(token, head) scale planes.
+
+    Identical control flow to ``_paged_decode_kernel``; the only addition is
+    the in-VMEM dequantization of each fetched page.  Dequant goes through a
+    bfloat16 intermediate (int8 value × bf16 scale, then widened to f32) so
+    the result is bit-identical to the contiguous KV8 path, which dequantizes
+    in bf16 before handing the cache to the non-quant kernel."""
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[bi]
+    k_start = ki * page_size
+
+    @pl.when(k_start < cache_len)  # dead pages: no MXU work
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (1, d)
+        # bf16-op semantics, spelled out so fusion cannot skip the product
+        # rounding: f32 multiply of the exact inputs, then an explicit
+        # (lossy, hence preserved) round to bf16.  This reproduces the
+        # contiguous KV8 path's materialized `int8.astype(bf16) * bf16`
+        # bit-for-bit.
+        ks = ks_ref[0, :, 0].astype(jnp.bfloat16).astype(jnp.float32)
+        vs = vs_ref[0, :, 0].astype(jnp.bfloat16).astype(jnp.float32)
+        k = (k_ref[0, :, 0].astype(jnp.float32)      # (page_size, d)
+             * ks[:, None]).astype(jnp.bfloat16).astype(jnp.float32)
+        v = (v_ref[0, :, 0].astype(jnp.float32)
+             * vs[:, None]).astype(jnp.bfloat16).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_ids = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        mask = k_ids < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
 def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                   v_pool: jax.Array, block_tables: jax.Array,
                                   cache_len: jax.Array, *, scale: float,
@@ -216,3 +274,61 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         interpret=interpret,
     )(bt, lens, q, k_pool, v_pool)
+
+
+def paged_decode_attention_quant_pallas(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        k_scale_pool: jax.Array, v_scale_pool: jax.Array,
+        block_tables: jax.Array, cache_len: jax.Array, *, scale: float,
+        interpret: bool) -> jax.Array:
+    """Paged decode attention over an int8 KV pool.
+
+    q: (b, h, 1, d); k_pool, v_pool: (num_pages, page_size, kv_h, d) int8;
+    k_scale_pool, v_scale_pool: (num_pages, page_size, kv_h) f32 per-(token,
+    head) dequant scales; block_tables: (b, n_pages) int32; cache_len: int32
+    scalar or (b,) live lengths.  Scale pages ride the same scalar-prefetched
+    block-table indirection as the KV pages — one extra small DMA per page.
+
+    Returns (b, h, 1, d)."""
+    b, h, _, d = q.shape
+    page_size, kv_h = k_pool.shape[1], k_pool.shape[2]
+    n_pages = block_tables.shape[1]
+    assert h % kv_h == 0
+    group = h // kv_h
+    grid = (b, h, n_pages)
+    kv_spec = pl.BlockSpec((1, page_size, 1, d),
+                           lambda bi, hi, ki, bt_ref, len_ref:
+                           (bt_ref[bi, ki], 0, hi // group, 0))
+    scale_spec = pl.BlockSpec((1, page_size, 1),
+                              lambda bi, hi, ki, bt_ref, len_ref:
+                              (bt_ref[bi, ki], 0, hi // group))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block tables + live lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bi, hi, ki, bt_ref, len_ref: (bi, hi, 0, 0)),
+            kv_spec,
+            kv_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bi, hi, ki, bt_ref, len_ref:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    bt = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
+    return pl.pallas_call(
+        functools.partial(_paged_decode_quant_kernel, scale=scale,
+                          page_size=page_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(bt, lens, q, k_pool, v_pool, k_scale_pool, v_scale_pool)

@@ -77,6 +77,31 @@ def decode_attention_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         jnp.asarray(cache_len), scale=scale, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged_quant(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, k_scale_pool: jax.Array,
+                                 v_scale_pool: jax.Array,
+                                 block_tables: jax.Array,
+                                 cache_len: jax.Array, *,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Single-token GQA attention against a *paged int8* KV cache.
+
+    Same contract as ``decode_attention_paged`` plus the two per-(token,
+    head) scale pools (num_pages, page_size, kv_h) f32.  Dequantization
+    happens inside the kernel after each page DMA (int8 × bf16 scale,
+    widened to f32), so HBM traffic stays int8 and the numerics match the
+    contiguous KV8 path's bf16 dequant exactly.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    d = q.shape[3]
+    scale = 1.0 / float(d) ** 0.5
+    return kernel.paged_decode_attention_quant_pallas(
+        q, k_pool, v_pool, k_scale_pool, v_scale_pool,
+        jnp.asarray(block_tables, jnp.int32), jnp.asarray(cache_len),
+        scale=scale, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("n_splits", "bkv", "interpret"))
 def decode_attention_splitk(q: jax.Array, k: jax.Array, v: jax.Array,
                             cache_len: jax.Array, *, n_splits: int = 4,

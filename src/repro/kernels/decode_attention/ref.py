@@ -47,3 +47,33 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
     k = gather_pages_ref(k_pool, block_tables)
     v = gather_pages_ref(v_pool, block_tables)
     return decode_attention_ref(q, k, v, cache_len, scale=scale)
+
+
+def gather_scale_pages_ref(scale_pool, block_tables):
+    """Materialize per-slot contiguous dequant-scale rows from the scale pool.
+
+    scale_pool: (num_pages, page_size, kv_h); block_tables: (b, n_pages) int32
+    -> (b, kv_h, n_pages * page_size).  Dead entries gather the null page's
+    scales (zeros) — dequantized dead positions are exact zeros and masked by
+    ``cache_len`` anyway."""
+    g = scale_pool[block_tables]                 # (b, n, ps, kv_h)
+    b, n, ps = g.shape[:3]
+    return g.reshape(b, n * ps, g.shape[3]).transpose(0, 2, 1)
+
+
+def paged_decode_attention_quant_ref(q, k_pool, v_pool, k_scale_pool,
+                                     v_scale_pool, block_tables, cache_len, *,
+                                     scale=None):
+    """Oracle for paged int8-KV decode attention: gather pages and per-token
+    scales, dequantize through bfloat16 (matching the contiguous KV8 path's
+    numerics), then run the contiguous oracle.
+
+    q: (b, h, 1, d); pools: (num_pages, page_size, kv_h, d) int8; scale
+    pools: (num_pages, page_size, kv_h) f32; block_tables: (b, n_pages)."""
+    k = gather_pages_ref(k_pool, block_tables)
+    v = gather_pages_ref(v_pool, block_tables)
+    ks = gather_scale_pages_ref(k_scale_pool, block_tables)
+    vs = gather_scale_pages_ref(v_scale_pool, block_tables)
+    kd = k.astype(jnp.bfloat16) * ks[..., None].astype(jnp.bfloat16)
+    vd = v.astype(jnp.bfloat16) * vs[..., None].astype(jnp.bfloat16)
+    return decode_attention_ref(q, kd, vd, cache_len, scale=scale)

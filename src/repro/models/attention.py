@@ -526,7 +526,18 @@ def paged_update_kv_cache(k_pool: jax.Array, v_pool: jax.Array,
     in the null page with no mask plumbing at all — the paged replacement
     for the contiguous path's ``max_seq - 1`` tail parking."""
     b, t = k_new.shape[:2]
-    page_size = k_pool.shape[1]
+    pages, oi = _paged_write_targets(block_table, pos, b, t,
+                                     k_pool.shape[1], write_mask)
+    k_pool = k_pool.at[pages, oi].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[pages, oi].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def _paged_write_targets(block_table, pos, b, t, page_size, write_mask):
+    """Resolve (page, offset) scatter targets for ``t`` tokens per row
+    starting at flat position ``pos`` — shared by the KV-value and the
+    scale-plane scatters so both route dead writes to the null page the
+    same way."""
     n_pages = block_table.shape[1]
     p = jnp.asarray(pos, jnp.int32)
     if p.ndim == 0:
@@ -542,9 +553,50 @@ def paged_update_kv_cache(k_pool: jax.Array, v_pool: jax.Array,
                                 jnp.minimum(pi, n_pages - 1), axis=1)
     pages = jnp.where(valid, pages, 0)   # dead writes -> null page
     oi = jnp.where(valid, oi, 0)
-    k_pool = k_pool.at[pages, oi].set(k_new.astype(k_pool.dtype))
-    v_pool = v_pool.at[pages, oi].set(v_new.astype(v_pool.dtype))
-    return k_pool, v_pool
+    return pages, oi
+
+
+def paged_update_kv_scales(k_scale_pool: jax.Array, v_scale_pool: jax.Array,
+                           ks_new: jax.Array, vs_new: jax.Array,
+                           block_table: jax.Array, pos,
+                           write_mask: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter per-(token, head) dequant scales into their paged planes —
+    the int8 KV pools' companion (same ``(block_id, offset)`` resolution,
+    same null-page routing; the planes just lack the head_dim axis).
+
+    Scale pools: (num_pages, page_size, kv_h); ks_new, vs_new:
+    (b, t, kv_h)."""
+    b, t = ks_new.shape[:2]
+    pages, oi = _paged_write_targets(block_table, pos, b, t,
+                                     k_scale_pool.shape[1], write_mask)
+    k_scale_pool = k_scale_pool.at[pages, oi].set(
+        ks_new.astype(k_scale_pool.dtype))
+    v_scale_pool = v_scale_pool.at[pages, oi].set(
+        vs_new.astype(v_scale_pool.dtype))
+    return k_scale_pool, v_scale_pool
+
+
+def gather_scale_pages(scale_pool: jax.Array,
+                       block_table: jax.Array) -> jax.Array:
+    """Materialize contiguous per-slot scale rows from a paged scale plane.
+
+    scale_pool: (num_pages, page_size, kv_h); block_table: (b, n_pages)
+    -> (b, kv_h, n_pages * page_size).  Same oracle-helper layering as
+    ``gather_kv_pages``."""
+    from repro.kernels.decode_attention.ref import gather_scale_pages_ref
+    return gather_scale_pages_ref(scale_pool, block_table)
+
+
+def gather_kv_pages_dequant(pool: jax.Array, scale_pool: jax.Array,
+                            block_table: jax.Array, dtype) -> jax.Array:
+    """Gather a slot's int8 pages and dequantize with the paged scale
+    plane: (b, kv_h, S', d) in ``dtype``.  Dead positions carry scale 0
+    (the null page is never written with a live scale), so their rows
+    dequantize to exact zeros and stay inert under the downstream mask."""
+    vals = gather_kv_pages(pool, block_table)
+    scales = gather_scale_pages(scale_pool, block_table)
+    return vals.astype(dtype) * scales[..., None].astype(dtype)
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len, *,
@@ -562,6 +614,29 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len, *,
                                              cache_len)
     k = gather_kv_pages(k_pool, block_table).astype(q.dtype)
     v = gather_kv_pages(v_pool, block_table).astype(q.dtype)
+    return decode_attention_xla(q, k, v, cache_len, window=window)
+
+
+def paged_decode_attention_quant(q, k_pool, v_pool, k_scale_pool,
+                                 v_scale_pool, block_table, cache_len, *,
+                                 window=None, impl="xla"):
+    """Single-token attention against the int8 paged cache.
+
+    Pools are int8 with per-(token, head) scale planes (see
+    ``paged_update_kv_scales``).  Dequantization goes through bfloat16 —
+    exactly the contiguous KV8 decode path's read — so a paged-KV8 engine
+    is token-identical to a contiguous-KV8 one.  The Pallas path streams
+    int8 pages + scales through the block table and fuses the dequant into
+    the online-softmax loop (the int8 HBM read is the bandwidth win)."""
+    if impl == "pallas" and window is None:
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.decode_attention_paged_quant(
+            q, k_pool, v_pool, k_scale_pool, v_scale_pool, block_table,
+            cache_len)
+    k = gather_kv_pages_dequant(k_pool, k_scale_pool, block_table,
+                                jnp.bfloat16)
+    v = gather_kv_pages_dequant(v_pool, v_scale_pool, block_table,
+                                jnp.bfloat16)
     return decode_attention_xla(q, k, v, cache_len, window=window)
 
 
@@ -600,6 +675,30 @@ def paged_chunk_prefill_attention(q, k_pool, v_pool, block_table, offset,
     return paged_chunk_prefill_attention_xla(
         q, k_pool, v_pool, block_table, offset, k_fresh, v_fresh,
         window=window)
+
+
+def paged_chunk_prefill_attention_quant(q, k_pool, v_pool, k_scale_pool,
+                                        v_scale_pool, block_table, offset,
+                                        k_fresh, v_fresh, *, window=None):
+    """Chunk-vs-prefix attention against the int8 paged cache: gather +
+    dequantize the prefix pages (to the activation dtype, matching the
+    contiguous KV8 chunk path's read), overlay the chunk's fresh
+    full-precision K/V at the offset, and reuse the contiguous
+    formulation.  XLA-only — prefill is compute-bound, so the dequant
+    gather costs little relative to the chunk GEMMs."""
+    k = gather_kv_pages_dequant(k_pool, k_scale_pool, block_table, q.dtype)
+    v = gather_kv_pages_dequant(v_pool, v_scale_pool, block_table, q.dtype)
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.broadcast_to(off, (q.shape[0],))
+
+    def overlay(row, new, o):
+        return jax.lax.dynamic_update_slice_in_dim(row, new.astype(row.dtype),
+                                                   o, axis=1)
+
+    k = jax.vmap(overlay)(k, k_fresh, off)
+    v = jax.vmap(overlay)(v, v_fresh, off)
+    return chunk_prefill_attention_xla(q, k, v, off, window=window)
 
 
 def update_cache_slice(cache: jax.Array, new: jax.Array, pos,

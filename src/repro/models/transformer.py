@@ -220,21 +220,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype=jnp.bfloat16) -> dict:
+                     dtype=jnp.bfloat16, kv_quant: bool = False) -> dict:
     """Paged KV cache: a global pool of ``num_pages`` fixed-size pages of
     ``page_size`` tokens each, shared by every serving slot and addressed
     through per-slot block tables (see ``attention.paged_update_kv_cache``).
 
     Page 0 is the reserved null page (never owned by a slot; the target of
     every dead write).  Requires attention blocks — recurrent state (SSM /
-    xLSTM) is O(1) per slot and has nothing to page."""
+    xLSTM) is O(1) per slot and has nothing to page.
+
+    With ``kv_quant`` the K/V pools store int8 and two extra small pools
+    hold the per-(token, head) absmax scales — same layout minus the head
+    dim, paged by the same block tables, so the W1.58A8+KV8 recipe
+    composes with paging (the int8 pool read is the bandwidth win; scales
+    are ~1/hd of it)."""
     if cfg.block_kind != "attn":
         raise NotImplementedError(
             f"paged KV cache requires block_kind='attn' "
             f"(got {cfg.block_kind!r})")
     n_scan = n_scan_layers(cfg)
+    kv_dtype = jnp.int8 if kv_quant else dtype
     shape = (n_scan, num_pages, page_size, cfg.n_kv_heads, cfg.hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    cache = {"k": jnp.zeros(shape, kv_dtype),
+             "v": jnp.zeros(shape, kv_dtype)}
+    if kv_quant:
+        sshape = (n_scan, num_pages, page_size, cfg.n_kv_heads)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return cache
 
 
 def copy_paged_page(cache: dict, src, dst) -> dict:
@@ -272,9 +285,6 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
     k = layers.apply_rope(k, angles, cfg.rope_style)
 
     quantized = cache is not None and "k_scale" in cache
-    if page_table is not None and quantized:
-        raise NotImplementedError(
-            "paged KV cache does not support the int8-quantized cache yet")
 
     def q_kv(x):  # (b, t, kv_h, hd) -> int8 values + (b, t, kv_h) scale
         amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
@@ -327,6 +337,25 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             # the block-table prefix + the chunk's own fresh K/V — the
             # fresh operands play the contiguous path's overlay role, so
             # within-chunk numerics match monolithic prefill.
+            if quantized:
+                kq, ks = q_kv(k)
+                vq, vs = q_kv(v)
+                kc, vc = attention.paged_update_kv_cache(
+                    cache["k"], cache["v"], kq, vq, page_table, offsets,
+                    write_mask=admit)
+                ks_c, vs_c = attention.paged_update_kv_scales(
+                    cache["k_scale"], cache["v_scale"], ks, vs, page_table,
+                    offsets, write_mask=admit)
+                new_cache = {"k": kc, "v": vc,
+                             "k_scale": ks_c, "v_scale": vs_c}
+                kc_r, vc_r, ks_r, vs_r = jax.lax.optimization_barrier(
+                    (kc, vc, ks_c, vs_c))
+                o = attention.paged_chunk_prefill_attention_quant(
+                    q.transpose(0, 2, 1, 3), kc_r, vc_r, ks_r, vs_r,
+                    page_table, offsets, k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), window=cfg.swa_window)
+                o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+                return layers.linear_apply(p["o"], o, ctx), new_cache
             kc, vc = attention.paged_update_kv_cache(
                 cache["k"], cache["v"], k, v, page_table, offsets,
                 write_mask=admit)
@@ -381,6 +410,24 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             # lane parked at max_seq) land in the null page.  Attention
             # streams only the slot's owned pages (Pallas) or gathers
             # them (XLA).
+            if quantized:
+                kq, ks = q_kv(k)
+                vq, vs = q_kv(v)
+                kc, vc = attention.paged_update_kv_cache(
+                    cache["k"], cache["v"], kq, vq, page_table, cache_len)
+                ks_c, vs_c = attention.paged_update_kv_scales(
+                    cache["k_scale"], cache["v_scale"], ks, vs, page_table,
+                    cache_len)
+                new_cache = {"k": kc, "v": vc,
+                             "k_scale": ks_c, "v_scale": vs_c}
+                kc_r, vc_r, ks_r, vs_r = jax.lax.optimization_barrier(
+                    (kc, vc, ks_c, vs_c))
+                o = attention.paged_decode_attention_quant(
+                    q.transpose(0, 2, 1, 3), kc_r, vc_r, ks_r, vs_r,
+                    page_table, cache_len + 1, window=cfg.swa_window,
+                    impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+                o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+                return layers.linear_apply(p["o"], o, ctx), new_cache
             kc, vc = attention.paged_update_kv_cache(
                 cache["k"], cache["v"], k, v, page_table, cache_len)
             new_cache = {"k": kc, "v": vc}

@@ -34,6 +34,25 @@ keeps the whole serving tick on device:
     never stall in-flight lanes for more than one chunk + one block
     dispatch (``stats["max_chunks_between_decode_blocks"]`` records the
     bound).
+  * **device-resident scheduling** (``device_sched=True``, the default) —
+    the per-block scheduler state (``last_token``, ``cache_len``,
+    ``emitted``, active mask, per-slot ``max_new``/``temps``/``seeds``)
+    lives in a device pytree threaded block-to-block through the fused
+    decode jit, so block N+1 dispatches immediately after block N with
+    ZERO device->host round-trips in steady state; the host fetches each
+    block's tokens ONE BLOCK BEHIND (block N is read back while block N+1
+    runs) and only mirrors the state for admission/retirement decisions.
+    Because the host view lags by at most one block, a lane that finishes
+    on device may tick through one extra fully masked block before the
+    host retires it — those ticks emit nothing and their writes are
+    parked, so outputs are token-identical to the host-driven engine
+    (``device_sched=False``, which syncs every block before the next
+    dispatch).  ``stats["host_block_syncs"]`` counts block readbacks a
+    subsequent dispatch had to wait for (every block in host mode; only
+    retire/admit-triggering blocks in device mode) and
+    ``stats["steady_state_syncs_per_block"]`` is that count over blocks
+    dispatched with no admission/retire/prefill since the previous block
+    — exactly 0.0 device-resident, 1.0 host-driven.
 
 **Paged KV cache** (``paged=True``): instead of one contiguous ``max_seq``
 cache row per slot, the engine owns a global pool of fixed-size KV pages
@@ -107,16 +126,34 @@ Sharing invariants (load-bearing; the property tests in
     deferring.  Index-only pages are invisible to the gate: they are
     reclaimed on demand by LRU eviction when allocation runs dry.
 
-Slot state machine (host side, one ``_Slot`` per decode lane; bracketed
-steps are paged-mode only):
+Slot state machine — who owns what.  Each decode lane is mirrored twice:
+a device row in the resident ``SchedulerState`` pytree (``last_token``,
+``cache_len``, ``emitted``, ``active``, ``max_new``, ``temps``, ``seeds``
+— everything a decode tick reads or writes) and a host ``_Slot`` (the
+request object, accumulated output tokens, and a ``cache_len`` mirror —
+everything admission, retirement and the page allocator need).  The
+device copy is authoritative during decode and is threaded block-to-block
+without readback; the host copy trails it by at most one block and is the
+only place FREE/ACTIVE transitions are decided.  Bracketed steps are
+paged-mode only; ``{host}``/``{device}`` marks where each step runs:
 
-    FREE --[reserve worst-case pages]--
-         admit(chunk* [+ grow pages over the written prefix],
-               first token sampled on device)--> ACTIVE
-    ACTIVE --decode block [grow pages to cover the block's appends]
-             (emitted += k, cache_len += k)--> ACTIVE
-    ACTIVE --emitted == max_new_tokens or cache_len == max_seq-->
-           FREE [pages + reservation returned, block-table row zeroed]
+    FREE --[reserve worst-case pages {host};
+            device_sched: pre-grant the full reservation {host}]--
+         admit(chunk* {device} [+ host mode: grow pages over the written
+               prefix], first token sampled {device}, lane merged into the
+               resident state {device})--> ACTIVE
+    ACTIVE --decode block {device}: emitted += k, cache_len += k, done
+             mask maintained on device [host mode only: grow pages to
+             cover the block's appends {host}]--> ACTIVE
+    ACTIVE --emitted == max_new_tokens or cache_len == max_seq:
+           the lane deactivates ITSELF on device; the host observes this
+           one block later in the readback--> FREE {host}
+           [pages + reservation returned, block-table row cleared
+            device-side via a row-granular update]
+
+With ``device_sched=False`` the device pytree is not built: the host
+arrays are rebuilt and uploaded per block (the pre-PR behaviour), which
+is the reference the equivalence tests compare against.
 
 Sampling is reproducible per request: each slot's PRNG key is
 ``fold_in(PRNGKey(request.seed), emitted_index)``, so a request's output
@@ -396,13 +433,21 @@ class ServingEngine:
                  paged: bool = False, page_size: int = 16,
                  kv_pages: Optional[int] = None,
                  enable_prefix_sharing: bool = False,
-                 prefix_cache_pages: Optional[int] = None):
+                 prefix_cache_pages: Optional[int] = None,
+                 device_sched: bool = True,
+                 kv_quant: bool = False):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
         self.slots = batch_slots
         self.decode_block = max(1, decode_block)
         self.paged = bool(paged)
+        self.device_sched = bool(device_sched)
+        self.kv_quant = bool(kv_quant)
+        if self.kv_quant and cfg.block_kind != "attn":
+            raise ValueError(
+                "kv_quant=True (int8 KV + per-(token, head) scales) requires "
+                f"block_kind='attn'; got {cfg.block_kind!r}")
         if self.paged:
             if cfg.block_kind != "attn":
                 raise ValueError(
@@ -487,29 +532,10 @@ class ServingEngine:
             first = _sample(logits, seeds, jnp.zeros_like(seeds), temps)
             return first, cache
 
-        @functools.partial(jax.jit, donate_argnums=(2,))
-        def _decode_block(params, tokens, cache, bt, cache_len, emitted,
-                          max_new, active, temps, seeds):
-            """Fused multi-tick decode: scan `decode_block` ticks on device.
-
-            The packed ternary weights are pre-decoded ONCE here, outside
-            the scan, so the base-3 unpack is amortized over the block's
-            ticks (the paper's decode-bandwidth argument in software: batch
-            tokens against one pass over the weight stream) — bit-identical
-            outputs to the packed path.
-
-            Finished lanes keep ticking under a mask (static scan shape):
-            they emit pad token 0 and their bookkeeping freezes.  Their KV
-            write is parked at flat address ``max_seq``: contiguous mode
-            clamps that to the row tail (position ``max_seq - 1``), where it
-            is either masked by the live length or, for a lane that filled
-            its row, never attended again before the slot is retired
-            (asserted host-side); paged mode resolves it through the block
-            table to a location no live token can occupy — the null page, or
-            the final page's slack row when page_size does not divide
-            max_seq.
-            """
-            params = transformer.predecode_packed(cfg_, params)
+        def _make_tick(params, bt, max_new, temps, seeds):
+            """The single decode tick shared by the host-driven and the
+            device-resident block: one decode_step + sample + bookkeeping
+            over the (tokens, cache, cache_len, emitted, active) carry."""
 
             def tick(carry, _):
                 tokens, cache, cache_len, emitted, active = carry
@@ -539,10 +565,83 @@ class ServingEngine:
                 return ((tokens, cache, cache_len, emitted, new_active),
                         (out, active))
 
+            return tick
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def _decode_block(params, tokens, cache, bt, cache_len, emitted,
+                          max_new, active, temps, seeds):
+            """Fused multi-tick decode: scan `decode_block` ticks on device.
+
+            The packed ternary weights are pre-decoded ONCE here, outside
+            the scan, so the base-3 unpack is amortized over the block's
+            ticks (the paper's decode-bandwidth argument in software: batch
+            tokens against one pass over the weight stream) — bit-identical
+            outputs to the packed path.
+
+            Finished lanes keep ticking under a mask (static scan shape):
+            they emit pad token 0 and their bookkeeping freezes.  Their KV
+            write is parked at flat address ``max_seq``: contiguous mode
+            clamps that to the row tail (position ``max_seq - 1``), where it
+            is either masked by the live length or, for a lane that filled
+            its row, never attended again before the slot is retired
+            (asserted host-side); paged mode resolves it through the block
+            table to a location no live token can occupy — the null page, or
+            the final page's slack row when page_size does not divide
+            max_seq.
+            """
+            params = transformer.predecode_packed(cfg_, params)
+            tick = _make_tick(params, bt, max_new, temps, seeds)
             carry = (tokens, cache, cache_len, emitted, active)
             (tokens, cache, cache_len, emitted, active), (blk, mask) = \
                 jax.lax.scan(tick, carry, None, length=block_)
             return blk.T, mask.T, cache  # (slots, decode_block) each
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def _decode_block_dev(params, state, cache, bt):
+            """Device-resident fused decode block: the whole per-slot
+            scheduler carry (``last_token``/``cache_len``/``emitted``/
+            ``active`` plus the per-request sampling constants) lives in
+            the donated ``state`` pytree and is threaded block-to-block on
+            device — dispatching block N+1 needs no host value from block
+            N, so the host never sits between blocks in steady state."""
+            params = transformer.predecode_packed(cfg_, params)
+            tick = _make_tick(params, bt, state["max_new"], state["temps"],
+                              state["seeds"])
+            carry = (state["last_token"], cache, state["cache_len"],
+                     state["emitted"], state["active"])
+            (tokens, cache, cache_len, emitted, active), (blk, mask) = \
+                jax.lax.scan(tick, carry, None, length=block_)
+            state = dict(state, last_token=tokens, cache_len=cache_len,
+                         emitted=emitted, active=active)
+            return state, blk.T, mask.T, cache
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _admit_lanes(state, first, upd, activate, cache_len, max_new,
+                         temps, seeds):
+            """Merge completed admissions into the device scheduler state:
+            rows under ``upd`` take the wave's on-device first token as
+            ``last_token`` (the token never visits the host on its way into
+            decode), reset their counters, and activate — unless the
+            request already finished at prefill (``activate`` false)."""
+            sel = lambda new, old: jnp.where(upd, new, old)
+            return {
+                "last_token": sel(first, state["last_token"]),
+                "cache_len": sel(cache_len, state["cache_len"]),
+                "emitted": sel(jnp.ones_like(state["emitted"]),
+                               state["emitted"]),
+                "active": jnp.where(upd, activate, state["active"]),
+                "max_new": sel(max_new, state["max_new"]),
+                "temps": jnp.where(upd, temps, state["temps"]),
+                "seeds": sel(seeds, state["seeds"]),
+            }
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _set_bt_row(bt, i, row):
+            """In-place update of one block-table row on device (slot grant/
+            growth installs its pages; retirement clears to the null page).
+            Row-granular so the resident table is never re-uploaded whole."""
+            return jax.lax.dynamic_update_slice(
+                bt, row[None].astype(bt.dtype), (i, 0))
 
         # legacy whole-prompt admission (recurrent kinds: SSM/xLSTM state
         # cannot resume chunk-to-chunk) — donor prefill + adopt, PR 1 style
@@ -570,6 +669,9 @@ class ServingEngine:
         self._sample_tokens = jax.jit(_sample)
         self._prefill_chunks = _prefill_chunks
         self._decode_block = _decode_block
+        self._decode_block_dev = _decode_block_dev
+        self._admit_lanes = _admit_lanes
+        self._set_bt_row = _set_bt_row
         self._prefill_full = _prefill_full
         self._adopt = _adopt
         self._cow_copy_page = _cow_copy_page
@@ -586,7 +688,9 @@ class ServingEngine:
             except AttributeError:
                 return None
         return {"prefill_chunk": size(self._prefill_chunks),
-                "decode_block": size(self._decode_block)}
+                "decode_block": size(self._decode_block_dev
+                                     if self.device_sched
+                                     else self._decode_block)}
 
     # -- paged-pool bookkeeping (host side) --------------------------------
 
@@ -621,18 +725,32 @@ class ServingEngine:
     def _own_page(self, i: int, pid: int, j: int) -> None:
         """Install a freshly allocated page (refcount 1: this slot alone —
         the writable-frontier invariant) at block-table position j of
-        slot i."""
+        slot i.  Callers batch the device-row push (``_push_bt_row``) after
+        all of a slot's installs."""
         self._bt[i, j] = pid
         self._slot_pages[i].append(pid)
         self._page_slot_refs[pid] = self._page_slot_refs.get(pid, 0) + 1
         self._backed.add(pid)
-        self._bt_dev = None  # host table changed: re-upload on next dispatch
+
+    def _push_bt_row(self, i: int) -> None:
+        """Mirror slot i's host block-table row into the resident device
+        table as a row-granular dynamic update.  Before the first dispatch
+        (``_bt_dev`` still None) there is nothing to patch — the lazy full
+        upload in ``_bt_device`` picks the row up.  This replaces the old
+        whole-table invalidate/re-upload on every grow/grant/retire."""
+        if self._bt_dev is not None:
+            self._bt_dev = self._set_bt_row(
+                self._bt_dev, jnp.asarray(i, jnp.int32),
+                jnp.asarray(self._bt[i]))
 
     def _grow_pages(self, i: int, upto_tokens: int) -> None:
-        """Lazily extend slot i's page list to cover flat positions
+        """Extend slot i's page list to cover flat positions
         [0, upto_tokens).  Pre-granted shared pages count toward coverage;
         growth never exceeds the slot's admission reservation (which
-        excludes them), so the pool can't run dry mid-flight."""
+        excludes them), so the pool can't run dry mid-flight.  Host-driven
+        scheduling grows lazily (prefill frontier / next decode block);
+        device-resident scheduling pre-grants the whole reservation at
+        admission, making every later call a no-op."""
         need = -(-upto_tokens // self.page_size)
         pages = self._slot_pages[i]
         if need <= len(pages):
@@ -640,6 +758,7 @@ class ServingEngine:
         new = self._alloc_pages(need - len(pages))
         for j, pid in enumerate(new, start=len(pages)):
             self._own_page(i, pid, j)
+        self._push_bt_row(i)
 
     def _pinned_unreserved(self) -> int:
         """Unique pages kept alive by slot references but not covered by
@@ -655,7 +774,12 @@ class ServingEngine:
         reads (shared prefix pages survive while the index or other slots
         still read them; exclusively owned pages return to the free list),
         return its reservation, and zero its block-table row so later
-        writes by the dead lane land in the null page."""
+        writes by the dead lane land in the null page.  The device table
+        gets a row-granular clear (not a full re-upload): retirement is a
+        single dynamic-update-slice on the resident array, so it composes
+        with in-flight decode blocks under the device-resident scheduler
+        (ordering by data dependence through the threaded cache/table)."""
+        self._sched_epoch += 1
         if self.paged:
             # detach the slot's bookkeeping before dropping any reference,
             # so the pool and block tables always agree
@@ -665,7 +789,7 @@ class ServingEngine:
             self._reserved_total -= self._slot_reserved[i]
             self._slot_reserved[i] = 0
             self._bt[i, :] = 0
-            self._bt_dev = None
+            self._push_bt_row(i)
             for j, p in enumerate(pages):
                 if j >= shared_n:
                     self._backed.discard(p)
@@ -752,7 +876,6 @@ class ServingEngine:
             self._slot_pages[i].append(p)
             self._bt[i, j] = p
         self._slot_shared_n[i] = len(grant["pages"])
-        self._bt_dev = None
         if grant["cow_src"] is not None:
             # pin the donor page across the allocation AND the copy:
             # _alloc_pages may force-evict LRU leaves, and an index-only
@@ -768,6 +891,7 @@ class ServingEngine:
             finally:
                 self._pool.decref(grant["cow_src"])
             st["kv_cow_splits"] += 1
+        self._push_bt_row(i)
         st["prefix_hits"] += 1
         st["prefill_tokens_skipped"] += grant["base"]
         st["kv_pages_shared"] += len(grant["pages"])
@@ -821,8 +945,11 @@ class ServingEngine:
 
     def _bt_device(self):
         """Device block table at its full static width (pages_per_slot),
-        uploaded only when the host table changed (steady-state decode
-        re-uses the cached device array — no per-block transfer).
+        uploaded in full exactly once per run (lazily, at the first
+        dispatch); every later change — page grant, growth, retirement —
+        is a row-granular device-side update via ``_set_bt_row``, so
+        steady-state decode re-uses the resident array with no transfer
+        and no full re-upload ever happens again.
 
         The width is deliberately NOT sliced to the live high-water page
         count: every distinct width would recompile the fused decode block
@@ -881,6 +1008,7 @@ class ServingEngine:
         at most this one dispatch between decode blocks, no matter how many
         prompts are being admitted or how long they are."""
         self.stats["prefill_chunks"] += 1
+        self._sched_epoch += 1  # a wave mutates device-visible inputs
         if not self._chunked:  # recurrent: whole prompt, donor + adopt,
             i = next(iter(pending))  # one admission per wave
             admit = pending.pop(i)
@@ -893,6 +1021,14 @@ class ServingEngine:
                 jnp.asarray([plen], jnp.int32))
             tok = self._first_token(logits, req)
             cache = self._adopt(cache, one_cache, jnp.asarray(i, jnp.int32))
+            if self.device_sched:
+                self._merge_admissions(
+                    [(i, admit)],
+                    jnp.zeros((self.slots,), jnp.int32).at[i].set(tok),
+                    np.asarray([req.seed if i == j else 0
+                                for j in range(self.slots)], np.int32),
+                    np.asarray([req.temperature if i == j else 0.0
+                                for j in range(self.slots)], np.float32))
             self._finish_admission(slots, admit, tok, t0)
             return cache
         n, c = self.slots, self.prefill_chunk
@@ -931,29 +1067,95 @@ class ServingEngine:
             jnp.asarray(offs), jnp.asarray(mask), jnp.asarray(last),
             jnp.asarray(seeds), jnp.asarray(temps))
         if completing:
+            if self.device_sched:
+                # activate the lanes on device BEFORE the host sync: the
+                # wave's on-device first tokens flow straight into the
+                # resident scheduler state, so the readback below is pure
+                # bookkeeping (ttft, output buffers, prefix registration)
+                self._merge_admissions(
+                    [(i, pending[i]) for i in completing], first,
+                    seeds, temps)
             ft = np.asarray(first)  # sync only when an admission completes
             for i in completing:
                 self._finish_admission(slots, pending.pop(i), int(ft[i]), t0)
         return cache
 
+    def _merge_admissions(self, admits, first, seeds, temps) -> None:
+        """Fold completed admissions into the device scheduler state.
+        ``first`` stays a device array (the sampled first tokens never
+        bounce through the host on their way into decode).  Lanes whose
+        request already finished at prefill (max_new == 1 or a full row)
+        are merged inactive — the scan tick emits before checking done, so
+        activating them would emit one spurious token."""
+        n = self.slots
+        upd = np.zeros((n,), bool)
+        activate = np.zeros((n,), bool)
+        clens = np.zeros((n,), np.int32)
+        mnew = np.zeros((n,), np.int32)
+        for i, admit in admits:
+            req, plen = admit["req"], admit["plen"]
+            upd[i] = True
+            clens[i] = plen
+            mnew[i] = req.max_new_tokens
+            activate[i] = not (req.max_new_tokens <= 1
+                               or plen >= self.max_seq)
+        self._state = self._admit_lanes(
+            self._state, first, jnp.asarray(upd), jnp.asarray(activate),
+            jnp.asarray(clens), jnp.asarray(mnew), jnp.asarray(temps),
+            jnp.asarray(seeds))
+
     # -- decode (fused multi-tick block) -----------------------------------
+
+    def _note_dispatch(self) -> None:
+        """Classify this decode dispatch for the sync counters: an interval
+        with no admission/retire/prefill since the previous dispatch is a
+        steady-state block, and it is charged with whatever dispatch-gating
+        host syncs happened in that interval (host-driven: exactly the
+        previous block's readback; device-resident: none by construction —
+        a drain that retires a lane bumps the epoch, making the enclosing
+        interval non-steady)."""
+        st = self.stats
+        steady = (self._last_dispatch_epoch is not None
+                  and self._sched_epoch == self._last_dispatch_epoch)
+        if steady:
+            st["steady_state_blocks"] += 1
+            self._steady_syncs += self._syncs_since_dispatch
+        self._syncs_since_dispatch = 0
+        self._last_dispatch_epoch = self._sched_epoch
 
     def _run_decode_block(self, cache, slots):
         t_blk = time.perf_counter()
+        st = self.stats
         if self.paged:
-            # grow each live lane's page list to cover every append this
-            # block can make — bounded by the lane's remaining budget, so it
-            # never exceeds the admission reservation
-            for i, s in enumerate(slots):
-                if s.active:
-                    remaining = s.request.max_new_tokens - len(s.tokens)
-                    upto = min(s.cache_len
-                               + min(self.decode_block, remaining),
-                               self.max_seq)
-                    self._grow_pages(i, upto)
+            if not self.device_sched:
+                # host-driven: grow each live lane's page list to cover
+                # every append this block can make — bounded by the lane's
+                # remaining budget, so it never exceeds the admission
+                # reservation.  (Device-resident lanes pre-granted their
+                # whole reservation at admission; nothing to do.)
+                for i, s in enumerate(slots):
+                    if s.active:
+                        remaining = s.request.max_new_tokens - len(s.tokens)
+                        upto = min(s.cache_len
+                                   + min(self.decode_block, remaining),
+                                   self.max_seq)
+                        self._grow_pages(i, upto)
             live = sum(s.cache_len for s in slots if s.active)
-            self.stats["kv_live_tokens_peak"] = max(
-                self.stats["kv_live_tokens_peak"], live)
+            st["kv_live_tokens_peak"] = max(st["kv_live_tokens_peak"], live)
+        self._note_dispatch()
+        st["decode_blocks"] += 1
+        st["decode_steps"] += self.decode_block
+        if self.device_sched:
+            # dispatch from the device-resident carry: no host array is
+            # built and nothing from the previous block is awaited — block
+            # N+1 enters the stream while block N may still be running
+            self._state, blk, mask, cache = self._decode_block_dev(
+                self.params, self._state, cache, self._bt_device())
+            self._inflight.append((blk, mask))
+            st["decode_wall_s"] += time.perf_counter() - t_blk
+            # fetch one block behind: drain block N while block N+1 runs
+            self._drain_blocks(slots, depth=1)
+            return cache
         reqs = [s.request for s in slots]
         blk, mask, cache = self._decode_block(
             self.params,
@@ -968,12 +1170,34 @@ class ServingEngine:
             jnp.asarray([r.temperature if r else 0.0 for r in reqs],
                         jnp.float32),
             jnp.asarray([r.seed if r else 0 for r in reqs], jnp.int32))
-        blk = np.asarray(blk)    # the block's single host sync
+        self._process_block(slots, blk, mask, gating=True)
+        st["decode_wall_s"] += time.perf_counter() - t_blk
+        return cache
+
+    def _drain_blocks(self, slots, depth: int = 0) -> None:
+        """Read back queued decode blocks down to ``depth`` still in
+        flight (depth=1 is the steady-state one-block-behind pipeline;
+        depth=0 the final drain)."""
+        if not self._inflight:
+            return
+        t_d = time.perf_counter()
+        while len(self._inflight) > depth:
+            blk, mask = self._inflight.popleft()
+            self._process_block(slots, blk, mask, gating=False)
+        self.stats["decode_wall_s"] += time.perf_counter() - t_d
+
+    def _process_block(self, slots, blk, mask, *, gating: bool) -> None:
+        """Fold one decode block's readback into the host mirror: extend
+        outputs, advance lengths, retire finished lanes.  ``gating`` marks
+        a readback the next dispatch waits on (every block in host-driven
+        mode); in device-resident mode a readback only becomes a gating
+        sync when it triggers retirement — that is the moment host state
+        re-enters the device scheduler (row clear, freed reservation)."""
+        blk = np.asarray(blk)
         mask = np.asarray(mask)
         st = self.stats
-        st["decode_blocks"] += 1
-        st["decode_steps"] += self.decode_block
         st["decode_tokens"] += int(mask.sum())
+        retired = False
         live_after = 0  # post-append live tokens, counted before any free
         for i, s in enumerate(slots):
             if not s.active:
@@ -987,23 +1211,26 @@ class ServingEngine:
             if (len(s.tokens) >= s.request.max_new_tokens
                     or s.cache_len >= self.max_seq):
                 self._free_slot(slots, i)
+                retired = True
         if self.paged:
             # the gauge at block entry misses the block's own appends; this
             # post-append sample makes the live-token peak exact
             st["kv_live_tokens_peak"] = max(st["kv_live_tokens_peak"],
                                             live_after)
+        if gating or retired:
+            st["host_block_syncs"] += 1
+            self._syncs_since_dispatch += 1
         # the parked-write contract: the in-block park of a lane that filled
         # its row (contiguous: clamped to max_seq - 1, clobbering its own
         # last KV entry) is only safe because such a lane is retired HERE,
-        # before any dispatch could attend that row again.  A still-active
-        # lane at cache_len >= max_seq would read its own clobbered tail —
-        # fail fast (a RuntimeError, not an assert: this must survive -O)
+        # before the host could attend that row again with a NEW request.
+        # A still-active lane at cache_len >= max_seq would read its own
+        # clobbered tail — fail fast (a RuntimeError, not an assert: this
+        # must survive -O)
         if any(s.cache_len >= self.max_seq for s in slots if s.active):
             raise RuntimeError(
                 "active lane at cache_len >= max_seq: parked decode writes "
                 "could clobber a live token")
-        st["decode_wall_s"] += time.perf_counter() - t_blk
-        return cache
 
     # -- main loop ---------------------------------------------------------
 
@@ -1015,7 +1242,26 @@ class ServingEngine:
                       "prefill_chunks": 0, "decode_steps": 0,
                       "decode_blocks": 0, "decode_tokens": 0,
                       "decode_wall_s": 0.0,
-                      "max_chunks_between_decode_blocks": 0}
+                      "max_chunks_between_decode_blocks": 0,
+                      "host_block_syncs": 0, "steady_state_blocks": 0}
+        # sync-counter scaffolding: the scheduler epoch advances on every
+        # host event that feeds the device scheduler (admission wave,
+        # retirement); a decode block dispatched with the epoch unchanged
+        # since the previous dispatch ran in steady state
+        self._sched_epoch = 0
+        self._last_dispatch_epoch = None
+        self._syncs_since_dispatch = 0
+        self._steady_syncs = 0
+        self._inflight: deque = deque()  # dispatched, not yet read back
+        if self.device_sched:
+            z = lambda dt: jnp.zeros((self.slots,), dt)
+            self._state = {"last_token": z(jnp.int32),
+                           "cache_len": z(jnp.int32),
+                           "emitted": z(jnp.int32),
+                           "active": z(jnp.bool_),
+                           "max_new": z(jnp.int32),
+                           "temps": z(jnp.float32),
+                           "seeds": z(jnp.int32)}
         if self.paged:
             self.stats.update({"kv_pages_peak": 0, "kv_live_tokens_peak": 0,
                                "kv_reserved_pages_peak": 0,
@@ -1071,15 +1317,18 @@ class ServingEngine:
         slots = [_Slot() for _ in range(self.slots)]
         if self.paged:
             cache = transformer.init_paged_cache(
-                self.cfg, self.kv_pages, self.page_size, self.cache_dtype)
+                self.cfg, self.kv_pages, self.page_size, self.cache_dtype,
+                kv_quant=self.kv_quant)
         else:
             cache = transformer.init_cache(self.cfg, self.slots,
-                                           self.max_seq, self.cache_dtype)
+                                           self.max_seq, self.cache_dtype,
+                                           kv_quant=self.kv_quant)
         pending: dict = {}  # slot index -> in-progress admission
         chunks_since_block = 0
         deferred_head = None  # queue head already counted as deferred
         held_head = None      # queue head already counted as held
-        while queue or pending or any(s.active for s in slots):
+        while (queue or pending or any(s.active for s in slots)
+               or self._inflight):
             # wave-assign every free slot a queued request; all pending
             # admissions advance together, one chunk per wave dispatch.
             # mid-flight = an admission that starts while other lanes are
@@ -1140,6 +1389,16 @@ class ServingEngine:
                     pending[i] = self._start_admission(
                         i, queue.popleft(),
                         base=grant["base"] if grant else 0)
+                    if self.paged and self.device_sched:
+                        # pre-grant the lane's whole worst-case reservation
+                        # up front (the admission gate already reserved it,
+                        # so schedulability is unchanged) — decode then
+                        # never allocates, which is what lets block N+1
+                        # dispatch without consulting the host allocator
+                        req = pending[i]["req"]
+                        self._grow_pages(i, min(
+                            len(req.prompt) + req.max_new_tokens - 1,
+                            self.max_seq))
                     if any(o.active for o in slots):
                         self.stats["mid_flight_admissions"] += 1
             # one batched prefill wave — in-flight lanes stall for at most
@@ -1152,10 +1411,17 @@ class ServingEngine:
                     self.stats["max_chunks_between_decode_blocks"] = max(
                         self.stats["max_chunks_between_decode_blocks"],
                         chunks_since_block)
-            # one fused decode block for every live lane
+            # one fused decode block for every live lane.  Under the
+            # device-resident scheduler the host view can lag one block
+            # behind the device (a lane that finished on device still looks
+            # active here) — the extra dispatch ticks fully masked, and the
+            # drain inside _run_decode_block refreshes the view.
             if any(s.active for s in slots):
                 cache = self._run_decode_block(cache, slots)
                 chunks_since_block = 0
+            elif self._inflight:
+                # nothing left to dispatch: read back the trailing blocks
+                self._drain_blocks(slots, depth=0)
         wall = time.perf_counter() - t0
         total = sum(len(r.output) for r in requests)
         ttfts = [r.ttft_s for r in requests]
@@ -1171,6 +1437,17 @@ class ServingEngine:
                            else None),
             "ttft_p95_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
+            # dispatch-gating host syncs charged to steady-state blocks:
+            # exactly 1.0 host-driven (every block round-trips before the
+            # next dispatch), exactly 0.0 device-resident (the carry is
+            # threaded on device; drains that retire a lane end the steady
+            # interval and are charged to the non-steady block that follows)
+            "steady_state_syncs_per_block": (
+                self._steady_syncs / st["steady_state_blocks"]
+                if st["steady_state_blocks"] else 0.0),
+            "host_syncs_per_block": (
+                st["host_block_syncs"] / st["decode_blocks"]
+                if st["decode_blocks"] else 0.0),
         })
         if self.paged:
             usable = self._pool.usable

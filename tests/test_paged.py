@@ -383,3 +383,85 @@ def test_splitk_non_divisible_lengths(s, n_splits):
     got = ops.decode_attention_splitk(q, k, v, lens, n_splits=n_splits)
     np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
                                atol=1e-5, rtol=1e-5)
+
+# ---------------------------------------------------------------------------
+# Satellite: paged + int8 KV (per-page scale planes)
+# ---------------------------------------------------------------------------
+
+def test_init_paged_cache_kv_quant_layout(served_model):
+    """kv_quant=True paged cache: int8 KV pools plus per-(token, head) f32
+    scale planes riding the same page axis."""
+    cfg, _, _ = served_model
+    cache = transformer.init_paged_cache(cfg, 8, 4, kv_quant=True)
+    n_scan = cache["k"].shape[0]
+    assert cache["k"].dtype == jnp.int8 and cache["v"].dtype == jnp.int8
+    assert cache["k"].shape[1:3] == (8, 4)
+    for plane in ("k_scale", "v_scale"):
+        assert cache[plane].shape == (n_scan, 8, 4, cfg.n_kv_heads)
+        assert cache[plane].dtype == jnp.float32
+
+
+@pytest.mark.parametrize("page_size", [4, 5, 16])
+def test_paged_decode_attention_quant_matches_ref(page_size):
+    """int8 paged decode attention (XLA dequant-gather + Pallas in-kernel
+    dequant) == the quant oracle, with garbage in unowned pages and zero
+    scales on the null page."""
+    from repro.kernels.decode_attention import ops, ref
+    b, h, kv_h, d = 3, 4, 2, 8
+    lens = [7, 16, 2]
+    n_pages = -(-max(lens) // page_size)
+    pool_pages = 1 + b * n_pages
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128,
+                                  (pool_pages, page_size, kv_h, d)), jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128,
+                                  (pool_pages, page_size, kv_h, d)), jnp.int8)
+    ks = jnp.asarray(rng.random((pool_pages, page_size, kv_h)) * 0.05,
+                     jnp.float32)
+    vs = jnp.asarray(rng.random((pool_pages, page_size, kv_h)) * 0.05,
+                     jnp.float32)
+    # null page carries zero scales — its dequantized rows are exact zeros
+    ks = ks.at[0].set(0.0)
+    vs = vs.at[0].set(0.0)
+    perm = rng.permutation(np.arange(1, pool_pages))
+    bt = jnp.asarray(perm.reshape(b, n_pages), jnp.int32)
+    lens_j = jnp.asarray(lens, jnp.int32)
+    expect = ref.paged_decode_attention_quant_ref(q, kp, vp, ks, vs, bt,
+                                                  lens_j)
+    # the XLA path rounds softmax probabilities to the (bf16) cache dtype
+    # before the V aggregation — same as the contiguous KV8 engine path —
+    # so it sits a bf16-epsilon away from the f32-probability oracle
+    got_xla = attention.paged_decode_attention_quant(
+        q, kp, vp, ks, vs, bt, lens_j, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(expect),
+                               atol=1e-2, rtol=1e-2)
+    # the Pallas kernel keeps probabilities in f32 VMEM scratch: tight
+    got_pl = ops.decode_attention_paged_quant(q, kp, vp, ks, vs, bt, lens_j)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("device_sched", [False, True])
+def test_paged_kv8_engine_matches_contiguous_kv8(served_model, device_sched):
+    """W1.58A8 + KV8 composes with paging: a paged kv_quant engine emits
+    exactly the tokens of the contiguous kv_quant engine (the dequant read
+    paths are bit-matched), under both scheduler modes."""
+    cfg, packed, ctx = served_model
+    max_seq = 32
+    prompts, news = _mixed_requests()
+    reqs_c = [Request(prompt=p, max_new_tokens=n)
+              for p, n in zip(prompts, news)]
+    ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3, ctx=ctx,
+                  prefill_chunk=4, decode_block=8, kv_quant=True,
+                  device_sched=device_sched).run(reqs_c)
+    reqs_p = [Request(prompt=p, max_new_tokens=n)
+              for p, n in zip(prompts, news)]
+    eng = ServingEngine(cfg, packed, max_seq=max_seq, batch_slots=3, ctx=ctx,
+                        prefill_chunk=4, decode_block=8, paged=True,
+                        page_size=4, kv_quant=True,
+                        device_sched=device_sched)
+    eng.run(reqs_p)
+    for rc, rp in zip(reqs_c, reqs_p):
+        assert rc.done and rp.done
+        np.testing.assert_array_equal(rp.output, rc.output)
