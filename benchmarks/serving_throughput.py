@@ -26,6 +26,12 @@ count:
     the unique-page footprint drop (the deltas report all of it; the
     wins grow with slot count and with real accelerator prefill cost,
     which is the regime the paper's capacity argument targets).
+  * ``*_faults`` — with ``--inject-faults``, the fused (and paged)
+    configuration reruns under a deterministic injected-fault schedule
+    (one page-alloc failure, one NaN lane, one corrupted readback via
+    ``serving.FaultInjector``): the poisoned requests retire FAILED, every
+    other request completes, and the row's ``requests_*`` counters +
+    ``faults_injected`` report the containment.
   * ``*_device`` — with ``--device-sched``, each of the above reruns with
     the device-resident scheduler: slot bookkeeping lives in device arrays
     threaded block-to-block and the host reads results one block behind,
@@ -71,7 +77,12 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer
-from repro.serving import Request, ServingEngine
+from repro.serving import FaultInjector, Request, ServingEngine
+
+# bump when row keys change shape/meaning so trajectory tooling can key on
+# it; 2 = robustness gauges (requests_* / degraded_blocks / faults_injected
+# / watchdog_trips / sched_fallbacks on every row) + --inject-faults modes
+SCHEMA_VERSION = 2
 
 
 def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
@@ -101,7 +112,7 @@ def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             max_prompt, max_new, seed, mode, paged=False, page_size=16,
             kv_pages=None, shared_prefix_len=0, prefix_sharing=False,
-            device_sched=False):
+            device_sched=False, fault_injector=None):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new,
                          shared_prefix_len=shared_prefix_len)
@@ -111,11 +122,18 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
                         prefill_chunk=prefill_chunk, paged=paged,
                         page_size=page_size, kv_pages=kv_pages,
                         enable_prefix_sharing=prefix_sharing,
-                        device_sched=device_sched)
+                        device_sched=device_sched,
+                        fault_injector=fault_injector)
     # warmup: chunked prefill + fused decode compile O(1) shapes, so two
-    # tiny requests cover every program the timed run can hit
+    # tiny requests cover every program the timed run can hit.  The fault
+    # schedule is disarmed for warmup (ordinals reset per run, so an armed
+    # warmup would fire the measured run's faults).
+    if fault_injector is not None:
+        fault_injector.armed = False
     eng.run([Request(prompt=rng.integers(0, cfg.vocab_size, size=5),
                      max_new_tokens=2) for _ in range(2)])
+    if fault_injector is not None:
+        fault_injector.armed = True
     t0 = time.perf_counter()
     eng.run(reqs)
     wall = time.perf_counter() - t0
@@ -123,7 +141,11 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
     total = s["total_new_tokens"]
     util = (s["decode_tokens"] / (s["decode_steps"] * slots)
             if s["decode_steps"] else 1.0)
-    ttfts = np.asarray([r.ttft_s for r in reqs])
+    # faulted/rejected requests have no TTFT; the distribution covers
+    # the requests that produced a first token
+    ttfts = np.asarray([r.ttft_s for r in reqs if r.ttft_s is not None])
+    if not len(ttfts):
+        ttfts = np.asarray([float("nan")])
     out = {
         "mode": mode,
         "slots": slots,
@@ -151,6 +173,19 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         "host_syncs_per_block": s["host_syncs_per_block"],
         "steady_state_blocks": s["steady_state_blocks"],
         "steady_state_syncs_per_block": s["steady_state_syncs_per_block"],
+        # robustness gauges — always present in every row, fault mode or
+        # not, so downstream tooling can assert on the keys unconditionally
+        "requests_completed": s["requests_completed"],
+        "requests_rejected": s["requests_rejected"],
+        "requests_failed": s["requests_failed"],
+        "requests_timed_out": s["requests_timed_out"],
+        "requests_cancelled": s["requests_cancelled"],
+        "requests_degraded": s["requests_degraded"],
+        "degraded_blocks": s["degraded_blocks"],
+        "faults_injected": s["faults_injected"],
+        "watchdog_trips": s["watchdog_trips"],
+        "sched_fallbacks": s["sched_fallbacks"],
+        "integrity_faults": s["integrity_faults"],
     }
     if paged:
         # schedulable slots at the contiguous configuration's KV budget:
@@ -219,6 +254,14 @@ def main():
                          "also run the prefix-sharing engine "
                          "(enable_prefix_sharing=True) to report TTFT and "
                          "pool-utilization deltas vs plain paged")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="also rerun the fused (and, with --paged, paged) "
+                         "configuration under a deterministic fault "
+                         "schedule (one page-alloc failure + one NaN lane "
+                         "+ one corrupted readback; modes suffixed "
+                         "_faults): the engine must finish every other "
+                         "request and the row reports the requests_* "
+                         "status counters and faults_injected")
     ap.add_argument("--device-sched", action="store_true",
                     help="also run each configuration with the device-"
                          "resident scheduler (slot bookkeeping threaded "
@@ -321,6 +364,34 @@ def main():
                         shared["prefill_tokens_skipped"],
                     "prefix_hit_rate": shared["prefix_hit_rate"],
                 }
+        if args.inject_faults:
+            # deterministic schedule: an admission-time page-alloc fault, a
+            # NaN lane mid-decode, and one corrupted readback.  Alloc
+            # faults need the paged engine; the NaN/corrupt guards fire in
+            # every mode.  The run must COMPLETE — every request ends with
+            # a terminal status and the survivors finish OK.
+            def _schedule():
+                return (FaultInjector()
+                        .fail_alloc(2)
+                        .inject_nan(lane=min(1, slots - 1), block=1)
+                        .corrupt_readback(3))
+            fault_cfgs = [("fused_faults", {})]
+            if args.paged:
+                fault_cfgs.append(
+                    ("paged_faults",
+                     dict(paged=True, page_size=args.page_size,
+                          kv_pages=args.kv_pages)))
+            for fmode, fkw in fault_cfgs:
+                frow = run_one(cfg, packed, slots=slots,
+                               decode_block=args.decode_block,
+                               prefill_chunk=args.prefill_chunk,
+                               mode=fmode, fault_injector=_schedule(),
+                               **fkw, **common)
+                assert (frow["requests_completed"]
+                        + frow["requests_failed"]
+                        + frow["requests_degraded"]) == args.n_requests, (
+                    "fault run did not terminate every request")
+                configs.append(frow)
         for r in configs:
             rows.append(r)
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"
@@ -356,6 +427,7 @@ def main():
     if args.json:
         payload = {
             "benchmark": "serving_throughput",
+            "schema_version": SCHEMA_VERSION,
             "host": {"backend": jax.default_backend(),
                      "interpret_kernels": jax.default_backend() != "tpu"},
             "workload": {**common, "decode_block": args.decode_block,

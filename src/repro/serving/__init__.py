@@ -1,1 +1,4 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (AuditError, Request,  # noqa: F401
+                                  RequestStatus, ServingEngine)
+from repro.serving.faultinject import (FaultInjector,  # noqa: F401
+                                       InjectedFault)

@@ -137,11 +137,19 @@ without readback; the host copy trails it by at most one block and is the
 only place FREE/ACTIVE transitions are decided.  Bracketed steps are
 paged-mode only; ``{host}``/``{device}`` marks where each step runs:
 
+    QUEUED --validation fails {host}--> DONE(REJECTED)
+           [never touches a slot, a page, or the device]
+    QUEUED --cancel()/deadline sweep {host}--> DONE(CANCELLED | TIMEOUT)
     FREE --[reserve worst-case pages {host};
             device_sched: pre-grant the full reservation {host}]--
          admit(chunk* {device} [+ host mode: grow pages over the written
                prefix], first token sampled {device}, lane merged into the
                resident state {device})--> ACTIVE
+    PENDING --alloc fault during grant/pre-grant/chunk growth {host}--
+            > DONE(FAILED)  [granted aliases + reservation roll back
+              refcount-exact; the wave row stays masked; other pending
+              admissions advance untouched]
+    PENDING --cancel()/deadline sweep {host}--> DONE(CANCELLED | TIMEOUT)
     ACTIVE --decode block {device}: emitted += k, cache_len += k, done
              mask maintained on device [host mode only: grow pages to
              cover the block's appends {host}]--> ACTIVE
@@ -149,11 +157,36 @@ paged-mode only; ``{host}``/``{device}`` marks where each step runs:
            the lane deactivates ITSELF on device; the host observes this
            one block later in the readback--> FREE {host}
            [pages + reservation returned, block-table row cleared
-            device-side via a row-granular update]
+            device-side via a row-granular update], request DONE(OK —
+           or DEGRADED when the engine has fallen back, see below)
+    ACTIVE --integrity guard {host, reading the device's in-block
+             non-finite latch or the token-range check}--> FREE {host},
+           request DONE(FAILED)  [tokens before the poisoned block kept;
+            pages roll back; prefix registrations withdrawn; the lane is
+            force-deactivated in the resident state {device} so later
+            blocks tick it fully masked — every other lane unaffected]
+    ACTIVE --cancel()/deadline sweep at a block boundary {host}--> FREE,
+           request DONE(CANCELLED | TIMEOUT)  [tokens so far kept; KV
+            valid, so prefix registrations STAY]
+
+Engine-level degradation (device-resident mode only): a dispatch that
+still fails after ``dispatch_retries`` re-issues, or a fused block that
+exceeds ``block_deadline_s`` (serving watchdog, non-process-killing),
+means the device scheduler itself can no longer be trusted.  The engine
+then *reconciles* — drains every in-flight readback, after which the
+host mirror is exact (each device transition is a pure function of the
+drained blocks) — drops the resident state, and finishes the run on the
+``device_sched=False`` host-driven path.  Surviving requests complete
+with token-identical greedy output, stamped DEGRADED; the next ``run()``
+starts device-resident again.  On the host path the same two triggers
+have no lower service level to fall to: a watchdog trip is only counted
+(the block did complete), a persistently failing dispatch retires the
+live batch FAILED and keeps serving the queue.
 
 With ``device_sched=False`` the device pytree is not built: the host
 arrays are rebuilt and uploaded per block (the pre-PR behaviour), which
-is the reference the equivalence tests compare against.
+is the reference the equivalence tests compare against — and the
+degradation target above.
 
 Sampling is reproducible per request: each slot's PRNG key is
 ``fold_in(PRNGKey(request.seed), emitted_index)``, so a request's output
@@ -169,16 +202,25 @@ donor prefill + adopt — the fused decode block works for them unchanged.
 (``decode_tokens / decode_wall_s``), TTFT p50/p95, and admission /
 interleave counters; paged mode adds KV pool gauges (page size, pool size,
 pages-in-use peak, pool utilization, live-token peak, reservation peak,
-page-starved admission deferrals).
+page-starved admission deferrals).  Robustness gauges are present in every
+mode: one ``requests_*`` counter per terminal status (recounted from the
+request objects at run end, so counters and statuses can never disagree),
+``degraded_blocks`` / ``sched_fallbacks`` / ``watchdog_trips`` /
+``integrity_faults`` / ``faults_injected``.  ``ServingEngine.audit()``
+re-derives the page-pool refcounts from the block tables and prefix trie
+and raises :class:`AuditError` on any leak / double-free / null-page
+violation (``audit_on_retire=True`` runs it after every fault-path
+retirement).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 import functools
 import time
 from collections import deque
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -187,21 +229,64 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.models.layers import Ctx
+from repro.runtime.fault import Watchdog, with_retries
+from repro.serving.faultinject import FaultInjector, InjectedFault
 
 _SEED_MOD = 2 ** 31 - 1
 
 
-@dataclasses.dataclass
-class Request:
+class RequestStatus(enum.Enum):
+    """Terminal disposition of a served request (set exactly once, when
+    ``done`` flips True).  The taxonomy is the per-request blast-radius
+    contract: anything short of OK names which containment path retired
+    the lane, and every one of them leaves the other lanes untouched."""
+
+    OK = "ok"               # completed normally
+    REJECTED = "rejected"   # failed admission-time validation; never ran
+    TIMEOUT = "timeout"     # deadline_s expired (queued or mid-flight)
+    CANCELLED = "cancelled"  # cancel(request) observed at a block boundary
+    FAILED = "failed"       # runtime fault confined to this lane (NaN/inf
+    #                         logits, corrupt readback, page-alloc fault)
+    DEGRADED = "degraded"   # finished with correct tokens, but after the
+    #                         engine fell back to the host-driven path
+
+
+class AuditError(RuntimeError):
+    """A page-pool / prefix-trie / block-table invariant is violated
+    (``ServingEngine.audit``)."""
+
+
+# stats key charged per terminal status; all six keys are always present
+# in ``engine.stats`` (and recounted from request objects at run end, so
+# the counters and the statuses can never disagree)
+_STATUS_COUNTERS = {
+    RequestStatus.OK: "requests_completed",
+    RequestStatus.REJECTED: "requests_rejected",
+    RequestStatus.TIMEOUT: "requests_timed_out",
+    RequestStatus.CANCELLED: "requests_cancelled",
+    RequestStatus.FAILED: "requests_failed",
+    RequestStatus.DEGRADED: "requests_degraded",
+}
+
+
+@dataclasses.dataclass(eq=False)  # identity eq: the prompt array makes
+class Request:                     # field-wise __eq__ ambiguous, and queue
+    # membership (cancel/deadline removal) must match THIS object anyway
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int = 16
     temperature: float = 0.0           # 0 = greedy
     seed: Optional[int] = None         # sampling seed; engine assigns a
     #                                    deterministic default if None
+    deadline_s: Optional[float] = None  # wall-clock budget from run()
+    #                                     start; checked at block/wave
+    #                                     boundaries -> TIMEOUT
     # filled by the engine:
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None     # time to first token (incl. queueing)
     done: bool = False
+    status: Optional[RequestStatus] = None
+    error: Optional[str] = None        # human-readable cause for non-OK
+    cancelled: bool = False            # set via ServingEngine.cancel()
 
 
 class _Slot:
@@ -219,10 +304,14 @@ class _Slot:
     def active(self) -> bool:
         return self.request is not None
 
-    def free(self) -> None:
+    def free(self, status: RequestStatus = RequestStatus.OK,
+             error: Optional[str] = None) -> None:
         r = self.request
         r.output = np.asarray(self.tokens, np.int32)
         r.done = True
+        r.status = status
+        if error is not None:
+            r.error = error
         self.request = None
         self.tokens = []
         self.cache_len = 0
@@ -435,7 +524,12 @@ class ServingEngine:
                  enable_prefix_sharing: bool = False,
                  prefix_cache_pages: Optional[int] = None,
                  device_sched: bool = True,
-                 kv_quant: bool = False):
+                 kv_quant: bool = False,
+                 block_deadline_s: Optional[float] = None,
+                 dispatch_retries: int = 2,
+                 fault_injector: Optional[FaultInjector] = None,
+                 audit_on_retire: bool = False,
+                 on_block: Optional[Callable] = None):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
@@ -486,6 +580,18 @@ class ServingEngine:
                               attn_q_chunk=128, attn_kv_chunk=128)
         self.seed = seed
         self.stats: dict = {}
+        # -- robustness layer ---------------------------------------------
+        # block_deadline_s bounds ONE fused-block dispatch + its gating
+        # readback (serving watchdog, non-process-killing: a trip is an
+        # integrity event, not an abort); dispatch_retries re-issues a
+        # dispatch that failed host-side BEFORE the jit call (no donated
+        # buffer lost); on_block(engine, block_ordinal) runs after every
+        # block's bookkeeping (monitoring / deterministic cancel seam).
+        self.block_deadline_s = block_deadline_s
+        self.dispatch_retries = max(0, int(dispatch_retries))
+        self.fault_injector = fault_injector
+        self.audit_on_retire = bool(audit_on_retire)
+        self.on_block = on_block
 
         cfg_, ctx_ = self.cfg, self.ctx
         max_seq_, block_ = self.max_seq, self.decode_block
@@ -532,13 +638,19 @@ class ServingEngine:
             first = _sample(logits, seeds, jnp.zeros_like(seeds), temps)
             return first, cache
 
-        def _make_tick(params, bt, max_new, temps, seeds):
+        def _make_tick(params, bt, max_new, temps, seeds, nan_mask):
             """The single decode tick shared by the host-driven and the
             device-resident block: one decode_step + sample + bookkeeping
-            over the (tokens, cache, cache_len, emitted, active) carry."""
+            over the (tokens, cache, cache_len, emitted, active, bad)
+            carry.  ``bad`` is the in-block integrity flag: a lane whose
+            logits go non-finite on any tick is latched bad for the block
+            and reported in the same readback as its tokens (one extra
+            (slots,) bool per block, no additional sync).  ``nan_mask`` is
+            the fault-injection seam — all-False in production, where the
+            ``jnp.where`` select is an exact identity."""
 
             def tick(carry, _):
-                tokens, cache, cache_len, emitted, active = carry
+                tokens, cache, cache_len, emitted, active, bad = carry
                 # park inactive lanes' cache write at flat address max_seq.
                 # An inactive lane is not necessarily empty: a mid-admission
                 # lane already holds written prompt KV that a cache_len-0
@@ -554,6 +666,13 @@ class ServingEngine:
                 logits, cache = transformer.decode_step(
                     cfg_, params, tokens[:, None], ctx_, cache, step_len,
                     page_table=bt if paged_ else None)
+                logits = jnp.where(nan_mask[:, None], jnp.nan, logits)
+                # integrity guard: latch lanes whose logits went non-finite
+                # (NaN/inf anywhere in the row poisons the sample)
+                bad = jnp.logical_or(bad, jnp.logical_and(
+                    active,
+                    jnp.logical_not(jnp.all(jnp.isfinite(
+                        logits.astype(jnp.float32)), axis=-1))))
                 nxt = _sample(logits, seeds, emitted, temps)
                 out = jnp.where(active, nxt, 0)
                 tokens = jnp.where(active, nxt, tokens)
@@ -562,14 +681,14 @@ class ServingEngine:
                 done = jnp.logical_or(emitted >= max_new,
                                       cache_len >= max_seq_)
                 new_active = jnp.logical_and(active, jnp.logical_not(done))
-                return ((tokens, cache, cache_len, emitted, new_active),
+                return ((tokens, cache, cache_len, emitted, new_active, bad),
                         (out, active))
 
             return tick
 
         @functools.partial(jax.jit, donate_argnums=(2,))
         def _decode_block(params, tokens, cache, bt, cache_len, emitted,
-                          max_new, active, temps, seeds):
+                          max_new, active, temps, seeds, nan_mask):
             """Fused multi-tick decode: scan `decode_block` ticks on device.
 
             The packed ternary weights are pre-decoded ONCE here, outside
@@ -590,14 +709,15 @@ class ServingEngine:
             max_seq.
             """
             params = transformer.predecode_packed(cfg_, params)
-            tick = _make_tick(params, bt, max_new, temps, seeds)
-            carry = (tokens, cache, cache_len, emitted, active)
-            (tokens, cache, cache_len, emitted, active), (blk, mask) = \
+            tick = _make_tick(params, bt, max_new, temps, seeds, nan_mask)
+            carry = (tokens, cache, cache_len, emitted, active,
+                     jnp.zeros_like(active))
+            (tokens, cache, cache_len, emitted, active, bad), (blk, mask) = \
                 jax.lax.scan(tick, carry, None, length=block_)
-            return blk.T, mask.T, cache  # (slots, decode_block) each
+            return blk.T, mask.T, bad, cache  # (slots, decode_block) each
 
         @functools.partial(jax.jit, donate_argnums=(1, 2))
-        def _decode_block_dev(params, state, cache, bt):
+        def _decode_block_dev(params, state, cache, bt, nan_mask):
             """Device-resident fused decode block: the whole per-slot
             scheduler carry (``last_token``/``cache_len``/``emitted``/
             ``active`` plus the per-request sampling constants) lives in
@@ -606,14 +726,15 @@ class ServingEngine:
             N, so the host never sits between blocks in steady state."""
             params = transformer.predecode_packed(cfg_, params)
             tick = _make_tick(params, bt, state["max_new"], state["temps"],
-                              state["seeds"])
+                              state["seeds"], nan_mask)
             carry = (state["last_token"], cache, state["cache_len"],
-                     state["emitted"], state["active"])
-            (tokens, cache, cache_len, emitted, active), (blk, mask) = \
+                     state["emitted"], state["active"],
+                     jnp.zeros_like(state["active"]))
+            (tokens, cache, cache_len, emitted, active, bad), (blk, mask) = \
                 jax.lax.scan(tick, carry, None, length=block_)
             state = dict(state, last_token=tokens, cache_len=cache_len,
                          emitted=emitted, active=active)
-            return state, blk.T, mask.T, cache
+            return state, blk.T, mask.T, bad, cache
 
         @functools.partial(jax.jit, donate_argnums=(0,))
         def _admit_lanes(state, first, upd, activate, cache_len, max_new,
@@ -642,6 +763,17 @@ class ServingEngine:
             Row-granular so the resident table is never re-uploaded whole."""
             return jax.lax.dynamic_update_slice(
                 bt, row[None].astype(bt.dtype), (i, 0))
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _kill_lane(state, i):
+            """Force-deactivate lane i in the resident scheduler state —
+            the device half of a host-initiated retirement (timeout,
+            cancellation, integrity failure).  In the normal flow lanes
+            deactivate THEMSELVES; this is the only transition the host
+            pushes onto the device mid-run, and it is a single scalar
+            update so it composes with in-flight blocks like a
+            block-table row patch does."""
+            return dict(state, active=state["active"].at[i].set(False))
 
         # legacy whole-prompt admission (recurrent kinds: SSM/xLSTM state
         # cannot resume chunk-to-chunk) — donor prefill + adopt, PR 1 style
@@ -672,9 +804,13 @@ class ServingEngine:
         self._decode_block_dev = _decode_block_dev
         self._admit_lanes = _admit_lanes
         self._set_bt_row = _set_bt_row
+        self._kill_lane = _kill_lane
         self._prefill_full = _prefill_full
         self._adopt = _adopt
         self._cow_copy_page = _cow_copy_page
+        # production NaN-injection mask: all-False, allocated once (the
+        # in-block jnp.where select is then an exact identity)
+        self._no_nan = jnp.zeros((self.slots,), jnp.bool_)
 
     def compiled_shapes(self) -> dict:
         """Live jit-cache entry counts (the O(1)-compile invariant; holds
@@ -714,6 +850,11 @@ class ServingEngine:
         for the next round).  The admission gate guarantees this always
         finds enough pages (see the prefix-sharing invariants in the class
         docstring)."""
+        if self.fault_injector is not None:
+            # injection seam: a scheduled alloc fault raises BEFORE any
+            # eviction or pool mutation, so the abort path rolls back from
+            # a consistent state
+            self.fault_injector.on_alloc()
         if self._prefix is not None:
             while self._pool.free_pages < n and self._evict_one_prefix():
                 pass
@@ -769,38 +910,219 @@ class ServingEngine:
         return sum(1 for p in self._page_slot_refs
                    if p not in self._backed)
 
-    def _free_slot(self, slots, i: int) -> None:
-        """Retire slot i: emit its output, drop one reference per page it
-        reads (shared prefix pages survive while the index or other slots
-        still read them; exclusively owned pages return to the free list),
-        return its reservation, and zero its block-table row so later
-        writes by the dead lane land in the null page.  The device table
-        gets a row-granular clear (not a full re-upload): retirement is a
-        single dynamic-update-slice on the resident array, so it composes
-        with in-flight decode blocks under the device-resident scheduler
-        (ordering by data dependence through the threaded cache/table)."""
+    def _release_slot_pages(self, i: int) -> None:
+        """Return slot i's KV bookkeeping to the pool: drop one reference
+        per page it reads (shared prefix pages survive while the index or
+        other slots still read them; exclusively owned pages return to the
+        free list), return its reservation, and zero its block-table row
+        so later writes by the dead lane land in the null page.  The
+        device table gets a row-granular clear (not a full re-upload):
+        retirement is a single dynamic-update-slice on the resident array,
+        so it composes with in-flight decode blocks under the
+        device-resident scheduler (ordering by data dependence through the
+        threaded cache/table).  Shared by every retirement path — normal
+        completion, admission abort, and fault/timeout/cancel retirement —
+        so the refcount discipline is identical no matter why a lane
+        dies."""
         self._sched_epoch += 1
-        if self.paged:
-            # detach the slot's bookkeeping before dropping any reference,
-            # so the pool and block tables always agree
-            pages, self._slot_pages[i] = self._slot_pages[i], []
-            shared_n = self._slot_shared_n[i]
-            self._slot_shared_n[i] = 0
-            self._reserved_total -= self._slot_reserved[i]
-            self._slot_reserved[i] = 0
-            self._bt[i, :] = 0
-            self._push_bt_row(i)
-            for j, p in enumerate(pages):
-                if j >= shared_n:
-                    self._backed.discard(p)
-                self._page_slot_refs[p] -= 1
-                if not self._page_slot_refs[p]:
-                    del self._page_slot_refs[p]
-                self._pool.decref(p)
-            if self._prefix is not None and self.prefix_cache_pages is not None:
-                # pages this slot pinned may have just become index-only
-                self._enforce_prefix_cap()
-        slots[i].free()
+        if not self.paged:
+            return
+        # detach the slot's bookkeeping before dropping any reference,
+        # so the pool and block tables always agree
+        pages, self._slot_pages[i] = self._slot_pages[i], []
+        shared_n = self._slot_shared_n[i]
+        self._slot_shared_n[i] = 0
+        if self._prefix is not None:
+            # registrations outlive a normally retired slot (the index
+            # holds its own refs); forget the provenance so a fault in the
+            # slot's NEXT occupant cannot withdraw them
+            self._slot_reg_nodes[i] = []
+        self._reserved_total -= self._slot_reserved[i]
+        self._slot_reserved[i] = 0
+        self._bt[i, :] = 0
+        self._push_bt_row(i)
+        for j, p in enumerate(pages):
+            if j >= shared_n:
+                self._backed.discard(p)
+            self._page_slot_refs[p] -= 1
+            if not self._page_slot_refs[p]:
+                del self._page_slot_refs[p]
+            self._pool.decref(p)
+        if self._prefix is not None and self.prefix_cache_pages is not None:
+            # pages this slot pinned may have just become index-only
+            self._enforce_prefix_cap()
+
+    def _free_slot(self, slots, i: int,
+                   status: RequestStatus = RequestStatus.OK,
+                   error: Optional[str] = None) -> None:
+        """Retire slot i: emit its output (with ``status``) and release its
+        pages/reservation via ``_release_slot_pages``.  An OK completion
+        after the engine degraded to the host-driven path is stamped
+        DEGRADED instead (correct tokens, reduced service level)."""
+        if status is RequestStatus.OK and self._degraded:
+            status = RequestStatus.DEGRADED
+            self.stats["requests_degraded"] += 1
+        self._release_slot_pages(i)
+        slots[i].free(status, error)
+
+    def _fault_retire(self, slots, i: int, status: RequestStatus,
+                      error: str, rollback_prefix: bool = False) -> None:
+        """Retire slot i mid-flight on a containment event (integrity
+        failure, timeout, cancellation): the request keeps its tokens so
+        far, is stamped ``status``/``error``, its pages and reservation
+        roll back refcount-exact, and — under the device-resident
+        scheduler — the lane is force-deactivated in the resident state so
+        later blocks tick it fully masked.  With ``rollback_prefix`` the
+        pages this slot registered in the prefix trie are withdrawn too
+        (a faulted lane's KV must not be granted to future admissions)."""
+        st = self.stats
+        if rollback_prefix:
+            self._unregister_prefix(i)
+        if self._dev_active and self._state is not None:
+            self._state = self._kill_lane(self._state,
+                                          jnp.asarray(i, jnp.int32))
+        self._free_slot(slots, i, status, error)
+        st[_STATUS_COUNTERS[status]] += 1
+        if self.audit_on_retire:
+            self.audit()
+
+    def _abort_admission(self, pending: dict, i: int, status: RequestStatus,
+                         error: str) -> None:
+        """Abort a PENDING admission (its lane never activated): the
+        request retires with no output, granted/owned pages and the
+        reservation roll back, and the slot returns to FREE.  Partially
+        prefilled KV in the released pages is stale-by-construction: a
+        recycled page's next owner rewrites every position below its live
+        length and attention masks the rest."""
+        admit = pending.pop(i)
+        req = admit["req"]
+        req.output = np.zeros((0,), np.int32)
+        req.done = True
+        req.status = status
+        req.error = error
+        self._release_slot_pages(i)
+        self.stats[_STATUS_COUNTERS[status]] += 1
+        if self.audit_on_retire:
+            self.audit()
+
+    def _reject_started_head(self, queue, i: int, error: str) -> None:
+        """A fault between reservation and admission start (prefix-grant
+        CoW allocation): the queue head retires FAILED, and whatever the
+        slot already holds — aliased grant pages, the reservation — rolls
+        back through the shared release path."""
+        req = queue.popleft()
+        req.output = np.zeros((0,), np.int32)
+        req.done = True
+        req.status = RequestStatus.FAILED
+        req.error = error
+        self._release_slot_pages(i)
+        self.stats[_STATUS_COUNTERS[RequestStatus.FAILED]] += 1
+        if self.audit_on_retire:
+            self.audit()
+
+    def _unregister_prefix(self, i: int) -> None:
+        """Withdraw the prefix-trie nodes slot i registered (deepest
+        first).  A node another prompt has since extended under stays —
+        its page was fully written before the fault window — but every
+        leaf this slot contributed drops its index reference."""
+        if self._prefix is None:
+            return
+        nodes = self._slot_reg_nodes[i]
+        self._slot_reg_nodes[i] = []
+        for node in reversed(nodes):
+            if node.children or node.parent is None:
+                continue
+            if node.parent.children.get(node.key) is not node:
+                continue  # already evicted
+            del node.parent.children[node.key]
+            self._prefix.n_pages -= 1
+            self._pool.decref(node.page)
+
+    def _reject(self, req: Request, error: str) -> None:
+        """Admission-time validation failure: the request never touches a
+        slot, a page, or the device — it is reported on the request object
+        (REJECTED) instead of raising out of ``run()`` and orphaning every
+        in-flight lane."""
+        req.output = np.zeros((0,), np.int32)
+        req.done = True
+        req.status = RequestStatus.REJECTED
+        req.error = error
+        self.stats["requests_rejected"] += 1
+
+    def _validate(self, req: Request) -> Optional[str]:
+        """Admission gate: return the rejection reason, or None when the
+        request is servable.  Order matters — shape checks before content
+        checks (an empty prompt has no min/max)."""
+        if len(req.prompt) < 1:
+            return "prompt must have at least one token"
+        if len(req.prompt) > self.max_seq:
+            return (f"prompt length {len(req.prompt)} > max_seq "
+                    f"{self.max_seq}")
+        if req.max_new_tokens < 1:  # prefill always emits a first token
+            return "max_new_tokens must be >= 1"
+        if self.cfg.frontend == "token" and (
+                int(np.min(req.prompt)) < 0
+                or int(np.max(req.prompt)) >= self.cfg.vocab_size):
+            # out-of-vocab ids make jnp.take fill NaN embeddings; the
+            # lane's KV writes (including null-page parks) then poison
+            # OTHER lanes through masked-position 0*NaN — reject at
+            # admission instead of corrupting outputs schedule-dependently
+            return (f"prompt token ids must be in "
+                    f"[0, {self.cfg.vocab_size})")
+        if self.paged and self.worst_case_pages(req) > self._pool.usable:
+            return (f"request needs {self.worst_case_pages(req)} KV pages "
+                    f"worst-case but the pool only has "
+                    f"{self._pool.usable}; raise kv_pages or shrink the "
+                    "request")
+        return None
+
+    def cancel(self, req: Request) -> None:
+        """Request cancellation: observed at the next block/wave boundary.
+        Queued requests retire without running; pending admissions abort;
+        live lanes keep their tokens so far.  Status CANCELLED."""
+        req.cancelled = True
+
+    def _expired(self, req: Request, t0: float) -> bool:
+        return (req.deadline_s is not None
+                and time.perf_counter() - t0 > req.deadline_s)
+
+    def _police(self, slots, pending: dict, queue, t0: float) -> None:
+        """Block-boundary sweep of the cancellation and deadline
+        contracts over all three request pools (queued, pending
+        admission, live lane).  Runs host-side only — no device sync; a
+        live lane's force-deactivation is a scalar device update."""
+        for r in list(queue):
+            why = (RequestStatus.CANCELLED if r.cancelled else
+                   RequestStatus.TIMEOUT if self._expired(r, t0) else None)
+            if why is not None:
+                queue.remove(r)
+                r.output = np.zeros((0,), np.int32)
+                r.done = True
+                r.status = why
+                r.error = ("cancelled before admission"
+                           if why is RequestStatus.CANCELLED
+                           else f"deadline_s={r.deadline_s} expired in queue")
+                self.stats[_STATUS_COUNTERS[why]] += 1
+        for i in list(pending):
+            r = pending[i]["req"]
+            if r.cancelled:
+                self._abort_admission(pending, i, RequestStatus.CANCELLED,
+                                      "cancelled during admission")
+            elif self._expired(r, t0):
+                self._abort_admission(
+                    pending, i, RequestStatus.TIMEOUT,
+                    f"deadline_s={r.deadline_s} expired during admission")
+        for i, s in enumerate(slots):
+            if not s.active:
+                continue
+            r = s.request
+            if r.cancelled:
+                self._fault_retire(slots, i, RequestStatus.CANCELLED,
+                                   "cancelled mid-decode")
+            elif self._expired(r, t0):
+                self._fault_retire(
+                    slots, i, RequestStatus.TIMEOUT,
+                    f"deadline_s={r.deadline_s} expired mid-decode")
 
     # -- prefix sharing (host side) ----------------------------------------
 
@@ -912,6 +1234,9 @@ class ServingEngine:
         new = self._prefix.insert(req.prompt, self._slot_pages[i][:m])
         for node in new:
             self._pool.incref(node.page)
+        # remember what this slot contributed so a later fault in the SAME
+        # occupancy can withdraw exactly these registrations and no others
+        self._slot_reg_nodes[i] = new
         if new and self.prefix_cache_pages is not None:
             self._enforce_prefix_cap()
 
@@ -1021,7 +1346,7 @@ class ServingEngine:
                 jnp.asarray([plen], jnp.int32))
             tok = self._first_token(logits, req)
             cache = self._adopt(cache, one_cache, jnp.asarray(i, jnp.int32))
-            if self.device_sched:
+            if self._dev_active:
                 self._merge_admissions(
                     [(i, admit)],
                     jnp.zeros((self.slots,), jnp.int32).at[i].set(tok),
@@ -1039,13 +1364,29 @@ class ServingEngine:
         seeds = np.zeros((n,), np.int32)
         temps = np.zeros((n,), np.float32)
         completing = []
-        for i, admit in pending.items():
+        for i in list(pending):
+            admit = pending[i]
             req, plen = admit["req"], admit["plen"]
             # shifted final chunk: never write past the cache row end.  A
             # shared-prefix admission starts at its base; the shift can
             # never cross below it (base <= max_seq - c by the lookup
             # clamp), so shared pages are never rewritten.
             lo = min(admit["base"] + admit["next"] * c, self.max_seq - c)
+            if self.paged:
+                # cover the chunk's live span [0, min(lo + C, plen));
+                # shifted-chunk slack writes past the prompt land either in
+                # the owned final page's masked tail (positions >= the live
+                # length) or, past the allocation, in the null page.
+                # Growth runs BEFORE the row is marked in the wave, so an
+                # allocation fault aborts only this admission and its row
+                # stays masked out of the dispatch.
+                try:
+                    self._grow_pages(i, min(lo + c, plen))
+                except InjectedFault as e:
+                    self._abort_admission(
+                        pending, i, RequestStatus.FAILED,
+                        f"KV page allocation failed during admission: {e}")
+                    continue
             seg = req.prompt[lo:lo + c]
             toks[i, :len(seg)] = seg
             offs[i] = lo
@@ -1053,21 +1394,17 @@ class ServingEngine:
             last[i] = max(0, min(plen - 1 - lo, c - 1))
             seeds[i] = req.seed
             temps[i] = req.temperature
-            if self.paged:
-                # cover the chunk's live span [0, min(lo + C, plen));
-                # shifted-chunk slack writes past the prompt land either in
-                # the owned final page's masked tail (positions >= the live
-                # length) or, past the allocation, in the null page
-                self._grow_pages(i, min(lo + c, plen))
             admit["next"] += 1
             if admit["next"] >= admit["n_chunks"]:
                 completing.append(i)
+        if not mask.any():
+            return cache  # every admission aborted this wave
         first, cache = self._prefill_chunks(
             self.params, jnp.asarray(toks), cache, self._bt_device(),
             jnp.asarray(offs), jnp.asarray(mask), jnp.asarray(last),
             jnp.asarray(seeds), jnp.asarray(temps))
         if completing:
-            if self.device_sched:
+            if self._dev_active:
                 # activate the lanes on device BEFORE the host sync: the
                 # wave's on-device first tokens flow straight into the
                 # resident scheduler state, so the readback below is pure
@@ -1123,56 +1460,152 @@ class ServingEngine:
         self._syncs_since_dispatch = 0
         self._last_dispatch_epoch = self._sched_epoch
 
+    def _nan_mask_for_block(self):
+        """Fault-injection seam: the NaN lane mask for the block about to
+        dispatch (keyed on the engine's decode-block ordinal).  Returns the
+        cached all-False mask when nothing is scheduled — zero allocation,
+        and the in-block select is an exact identity."""
+        fi = self.fault_injector
+        if fi is not None:
+            m = fi.nan_mask(self.stats["decode_blocks"] - 1, self.slots)
+            if m is not None:
+                return jnp.asarray(m)
+        return self._no_nan
+
     def _run_decode_block(self, cache, slots):
-        t_blk = time.perf_counter()
         st = self.stats
         if self.paged:
-            if not self.device_sched:
+            if not self._dev_active:
                 # host-driven: grow each live lane's page list to cover
                 # every append this block can make — bounded by the lane's
                 # remaining budget, so it never exceeds the admission
                 # reservation.  (Device-resident lanes pre-granted their
-                # whole reservation at admission; nothing to do.)
+                # whole reservation at admission; nothing to do.)  A
+                # growth fault retires only the lane that hit it.
                 for i, s in enumerate(slots):
                     if s.active:
                         remaining = s.request.max_new_tokens - len(s.tokens)
                         upto = min(s.cache_len
                                    + min(self.decode_block, remaining),
                                    self.max_seq)
-                        self._grow_pages(i, upto)
+                        try:
+                            self._grow_pages(i, upto)
+                        except InjectedFault as e:
+                            self._fault_retire(
+                                slots, i, RequestStatus.FAILED,
+                                f"KV page growth failed mid-decode: {e}")
             live = sum(s.cache_len for s in slots if s.active)
             st["kv_live_tokens_peak"] = max(st["kv_live_tokens_peak"], live)
+        if not any(s.active for s in slots):
+            return cache  # growth faults may have emptied the batch
         self._note_dispatch()
         st["decode_blocks"] += 1
         st["decode_steps"] += self.decode_block
-        if self.device_sched:
-            # dispatch from the device-resident carry: no host array is
-            # built and nothing from the previous block is awaited — block
-            # N+1 enters the stream while block N may still be running
-            self._state, blk, mask, cache = self._decode_block_dev(
-                self.params, self._state, cache, self._bt_device())
-            self._inflight.append((blk, mask))
+        if self._degraded:
+            st["degraded_blocks"] += 1
+        nan_mask = self._nan_mask_for_block()
+        wd = (Watchdog(self.block_deadline_s)
+              if self.block_deadline_s is not None else None)
+        try:
+            if wd is None:
+                cache = self._dispatch_block(cache, slots, nan_mask)
+            else:
+                # serving watchdog, non-process-killing: bound ONE fused
+                # block dispatch + its gating readback; a trip is recorded
+                # and (device mode) degrades rather than aborting
+                with wd:
+                    cache = self._dispatch_block(cache, slots, nan_mask)
+                if wd.fired:
+                    st["watchdog_trips"] += 1
+                    if self._dev_active:
+                        self._degrade(
+                            slots, "watchdog: fused-block dispatch "
+                            f"exceeded block_deadline_s="
+                            f"{self.block_deadline_s}")
+        except InjectedFault as e:
+            # a dispatch that still fails after the retry budget: the
+            # device scheduler is wedged.  Device mode reconciles and
+            # falls back to the host-driven path; the host path (already
+            # the lowest service level) fails the live batch and keeps
+            # serving the queue.
+            if self._dev_active:
+                self._degrade(slots, f"dispatch fault: {e}")
+            else:
+                for i, s in enumerate(slots):
+                    if s.active:
+                        self._fault_retire(
+                            slots, i, RequestStatus.FAILED,
+                            f"decode dispatch failed on host path: {e}")
+        return cache
+
+    def _dispatch_block(self, cache, slots, nan_mask):
+        """Issue one fused decode block (device-resident or host-driven),
+        with the injector's dispatch seam and ``with_retries`` wrapping
+        the host-side call.  Retries are legal because the seam fires
+        BEFORE the jit call — no donated buffer has been consumed when a
+        retryable fault raises."""
+        t_blk = time.perf_counter()
+        st = self.stats
+        fi = self.fault_injector
+        if self._dev_active:
+            def dispatch():
+                if fi is not None:
+                    fi.on_dispatch()
+                # dispatch from the device-resident carry: no host array
+                # is built and nothing from the previous block is awaited
+                # — block N+1 enters the stream while block N may still
+                # be running
+                return self._decode_block_dev(
+                    self.params, self._state, cache, self._bt_device(),
+                    nan_mask)
+            self._state, blk, mask, bad, cache = with_retries(
+                dispatch, max_retries=self.dispatch_retries,
+                retry_on=(InjectedFault,), backoff_s=0.0)()
+            self._inflight.append((blk, mask, bad))
             st["decode_wall_s"] += time.perf_counter() - t_blk
             # fetch one block behind: drain block N while block N+1 runs
             self._drain_blocks(slots, depth=1)
             return cache
         reqs = [s.request for s in slots]
-        blk, mask, cache = self._decode_block(
-            self.params,
-            jnp.asarray([s.last_token for s in slots], jnp.int32),
-            cache,
-            self._bt_device(),
-            jnp.asarray([s.cache_len for s in slots], jnp.int32),
-            jnp.asarray([len(s.tokens) for s in slots], jnp.int32),
-            jnp.asarray([r.max_new_tokens if r else 0 for r in reqs],
-                        jnp.int32),
-            jnp.asarray([s.active for s in slots], jnp.bool_),
-            jnp.asarray([r.temperature if r else 0.0 for r in reqs],
-                        jnp.float32),
-            jnp.asarray([r.seed if r else 0 for r in reqs], jnp.int32))
-        self._process_block(slots, blk, mask, gating=True)
+
+        def dispatch():
+            if fi is not None:
+                fi.on_dispatch()
+            return self._decode_block(
+                self.params,
+                jnp.asarray([s.last_token for s in slots], jnp.int32),
+                cache,
+                self._bt_device(),
+                jnp.asarray([s.cache_len for s in slots], jnp.int32),
+                jnp.asarray([len(s.tokens) for s in slots], jnp.int32),
+                jnp.asarray([r.max_new_tokens if r else 0 for r in reqs],
+                            jnp.int32),
+                jnp.asarray([s.active for s in slots], jnp.bool_),
+                jnp.asarray([r.temperature if r else 0.0 for r in reqs],
+                            jnp.float32),
+                jnp.asarray([r.seed if r else 0 for r in reqs], jnp.int32),
+                nan_mask)
+        blk, mask, bad, cache = with_retries(
+            dispatch, max_retries=self.dispatch_retries,
+            retry_on=(InjectedFault,), backoff_s=0.0)()
+        self._process_block(slots, blk, mask, bad, gating=True)
         st["decode_wall_s"] += time.perf_counter() - t_blk
         return cache
+
+    def _degrade(self, slots, reason: str) -> None:
+        """Graceful degradation: reconcile the (at most one block behind)
+        host mirror by draining everything in flight, drop the resident
+        device state — after a full drain the mirror is exact, because
+        every device-side transition is a pure function of the drained
+        readbacks — and finish the run on the host-driven reference path.
+        Surviving requests complete with correct (token-identical greedy)
+        outputs and status DEGRADED."""
+        self.stats["sched_fallbacks"] += 1
+        self._drain_blocks(slots, depth=0)
+        self._state = None
+        self._degraded = True
+        self._dev_active = False
+        self._sched_epoch += 1  # the fallback is a scheduler event
 
     def _drain_blocks(self, slots, depth: int = 0) -> None:
         """Read back queued decode blocks down to ``depth`` still in
@@ -1182,19 +1615,32 @@ class ServingEngine:
             return
         t_d = time.perf_counter()
         while len(self._inflight) > depth:
-            blk, mask = self._inflight.popleft()
-            self._process_block(slots, blk, mask, gating=False)
+            blk, mask, bad = self._inflight.popleft()
+            self._process_block(slots, blk, mask, bad, gating=False)
         self.stats["decode_wall_s"] += time.perf_counter() - t_d
 
-    def _process_block(self, slots, blk, mask, *, gating: bool) -> None:
-        """Fold one decode block's readback into the host mirror: extend
-        outputs, advance lengths, retire finished lanes.  ``gating`` marks
-        a readback the next dispatch waits on (every block in host-driven
-        mode); in device-resident mode a readback only becomes a gating
-        sync when it triggers retirement — that is the moment host state
-        re-enters the device scheduler (row clear, freed reservation)."""
+    def _process_block(self, slots, blk, mask, bad, *, gating: bool) -> None:
+        """Fold one decode block's readback into the host mirror: run the
+        output-integrity guards, extend outputs, advance lengths, retire
+        finished lanes.  ``gating`` marks a readback the next dispatch
+        waits on (every block in host-driven mode); in device-resident
+        mode a readback only becomes a gating sync when it triggers
+        retirement — that is the moment host state re-enters the device
+        scheduler (row clear, freed reservation).
+
+        Integrity guards, per lane: ``bad[i]`` (device-side non-finite
+        logits latch, read back with the tokens — no extra sync) and a
+        host-side token-range check (catches readback/interconnect
+        corruption the device could not see).  A flagged lane retires
+        FAILED with the tokens it had before this block; its prefix
+        registrations are withdrawn; every other lane is untouched."""
         blk = np.asarray(blk)
         mask = np.asarray(mask)
+        bad = np.asarray(bad)
+        fi = self.fault_injector
+        if fi is not None:
+            blk = fi.on_readback(blk, mask,
+                                 bad_token=self.cfg.vocab_size + 7)
         st = self.stats
         st["decode_tokens"] += int(mask.sum())
         retired = False
@@ -1202,7 +1648,26 @@ class ServingEngine:
         for i, s in enumerate(slots):
             if not s.active:
                 continue
-            new = blk[i][mask[i]].tolist()
+            if bad[i]:
+                st["integrity_faults"] += 1
+                self._fault_retire(
+                    slots, i, RequestStatus.FAILED,
+                    "non-finite logits in fused block (lane isolated; "
+                    "the block's tokens for this lane are discarded)",
+                    rollback_prefix=True)
+                retired = True
+                continue
+            new_arr = blk[i][mask[i]]
+            if new_arr.size and (int(new_arr.min()) < 0 or
+                                 int(new_arr.max()) >= self.cfg.vocab_size):
+                st["integrity_faults"] += 1
+                self._fault_retire(
+                    slots, i, RequestStatus.FAILED,
+                    "emitted token id out of range (corrupt readback; "
+                    "lane isolated)", rollback_prefix=True)
+                retired = True
+                continue
+            new = new_arr.tolist()
             s.tokens.extend(int(t) for t in new)
             s.cache_len += len(new)
             live_after += s.cache_len
@@ -1234,6 +1699,79 @@ class ServingEngine:
 
     # -- main loop ---------------------------------------------------------
 
+    def audit(self) -> dict:
+        """Verify the page-pool / prefix-trie / block-table invariants and
+        return a summary gauge dict; raise :class:`AuditError` on the first
+        violation.  This is the refcount oracle from the property tests
+        promoted into the engine: every page is either free or referenced
+        (no leaks), never both (no double-free), the null page never enters
+        the allocator or a slot (never shared), each slot's host block
+        table mirrors its page list exactly, and the pool's refcounts equal
+        the sum of slot references + prefix-index references recomputed
+        from scratch.  Callable between requests or right after a
+        fault-path retirement (``audit_on_retire=True`` does so
+        automatically); it reads only host state — no device sync."""
+        if not self.paged or not hasattr(self, "_pool"):
+            return {"ok": True, "paged": False}
+        pool = self._pool
+
+        def fail(msg):
+            raise AuditError(f"serving audit failed: {msg}")
+
+        free, live = pool._free, pool._refs
+        if len(set(free)) != len(free):
+            fail("duplicate entries in the free list (double free)")
+        if 0 in live or 0 in free:
+            fail("null page entered the allocator")
+        if set(free) & set(live):
+            fail("page both free and referenced")
+        if set(free) | set(live) != set(range(1, pool.num_pages)):
+            fail("pages leaked: neither free nor referenced")
+        if any(c < 1 for c in live.values()):
+            fail("nonpositive refcount on a live page")
+        # oracle recount: expected refcount = per-slot block-table
+        # references + prefix-index references, rebuilt from scratch
+        expected: dict = {}
+        for i, pages in enumerate(self._slot_pages):
+            row = self._bt[i]
+            for j, p in enumerate(pages):
+                if p == 0:
+                    fail(f"slot {i} owns the null page")
+                if int(row[j]) != p:
+                    fail(f"block-table row {i} diverged from the slot's "
+                         f"page list at column {j}")
+                expected[p] = expected.get(p, 0) + 1
+            if any(int(x) != 0 for x in row[len(pages):]):
+                fail(f"block-table row {i} has live entries past the "
+                     "slot's page list")
+        if expected != self._page_slot_refs:
+            fail("slot page-reference map diverged from the block tables")
+        n_index = 0
+        if self._prefix is not None:
+            stack = [self._prefix.root]
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                if node.page is not None:
+                    n_index += 1
+                    if node.page == 0:
+                        fail("null page registered in the prefix index")
+                    expected[node.page] = expected.get(node.page, 0) + 1
+            if n_index != self._prefix.n_pages:
+                fail("prefix-index page count diverged from its nodes")
+        if expected != live:
+            fail("pool refcounts diverged from the block-table + "
+                 "prefix-index oracle")
+        if sum(self._slot_reserved) != self._reserved_total:
+            fail("reservation sum diverged from per-slot reservations")
+        if not set(self._backed) <= set(live):
+            fail("reservation-backed page is not referenced")
+        return {"ok": True, "paged": True,
+                "used_pages": pool.used_pages,
+                "free_pages": pool.free_pages,
+                "shared_pages": pool.shared_pages,
+                "index_pages": n_index}
+
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve all requests: chunked admission interleaved with fused
         decode blocks (token-level continuous batching)."""
@@ -1243,7 +1781,14 @@ class ServingEngine:
                       "decode_blocks": 0, "decode_tokens": 0,
                       "decode_wall_s": 0.0,
                       "max_chunks_between_decode_blocks": 0,
-                      "host_block_syncs": 0, "steady_state_blocks": 0}
+                      "host_block_syncs": 0, "steady_state_blocks": 0,
+                      # robustness gauges — always present, every mode
+                      "requests_completed": 0, "requests_rejected": 0,
+                      "requests_failed": 0, "requests_timed_out": 0,
+                      "requests_cancelled": 0, "requests_degraded": 0,
+                      "degraded_blocks": 0, "faults_injected": 0,
+                      "watchdog_trips": 0, "sched_fallbacks": 0,
+                      "integrity_faults": 0}
         # sync-counter scaffolding: the scheduler epoch advances on every
         # host event that feeds the device scheduler (admission wave,
         # retirement); a decode block dispatched with the epoch unchanged
@@ -1253,6 +1798,17 @@ class ServingEngine:
         self._syncs_since_dispatch = 0
         self._steady_syncs = 0
         self._inflight: deque = deque()  # dispatched, not yet read back
+        # robustness scaffolding: _dev_active is the LIVE scheduler mode
+        # (flips False when the engine degrades mid-run; self.device_sched
+        # is the configured mode and never changes); _degraded stamps every
+        # later OK completion DEGRADED
+        self._dev_active = bool(self.device_sched)
+        self._degraded = False
+        self._state = None
+        fi = self.fault_injector
+        fi_events0 = len(fi.events) if fi is not None else 0
+        if fi is not None:
+            fi.reset_run()
         if self.device_sched:
             z = lambda dt: jnp.zeros((self.slots,), dt)
             self._state = {"last_token": z(jnp.int32),
@@ -1287,30 +1843,12 @@ class ServingEngine:
             self._backed: set = set()  # pages inside an active reservation
             self._slot_reserved = [0] * self.slots
             self._reserved_total = 0
-        for k, r in enumerate(requests):  # validate up front: a bad request
-            if len(r.prompt) > self.max_seq:  # must not abandon in-flight
-                raise ValueError(               # work
-                    f"prompt length {len(r.prompt)} > max_seq "
-                    f"{self.max_seq}")
-            if len(r.prompt) < 1:
-                raise ValueError("prompt must have at least one token")
-            if self.cfg.frontend == "token" and (
-                    int(np.min(r.prompt)) < 0
-                    or int(np.max(r.prompt)) >= self.cfg.vocab_size):
-                # out-of-vocab ids make jnp.take fill NaN embeddings; the
-                # lane's KV writes (including null-page parks) then poison
-                # OTHER lanes through masked-position 0*NaN — reject loudly
-                # instead of corrupting outputs schedule-dependently
-                raise ValueError(
-                    f"prompt token ids must be in [0, {self.cfg.vocab_size})")
-            if r.max_new_tokens < 1:  # prefill always emits a first token
-                raise ValueError("max_new_tokens must be >= 1")
-            if self.paged and self.worst_case_pages(r) > self._pool.usable:
-                raise ValueError(
-                    f"request needs {self.worst_case_pages(r)} KV pages "
-                    f"worst-case but the pool only has {self._pool.usable}; "
-                    "raise kv_pages or shrink the request")
-            # deterministic per-request default; normalize to int32 range
+        self._slot_reg_nodes: List[list] = [[] for _ in range(self.slots)]
+        for k, r in enumerate(requests):
+            # deterministic per-request default; normalize to int32 range.
+            # Validation happens at admission time (_validate/_reject): a
+            # bad request is reported on its own status instead of raising
+            # out of run() and abandoning every other lane.
             r.seed = ((self.seed * 1000003 + k) if r.seed is None
                       else int(r.seed)) % _SEED_MOD
         queue = deque(requests)
@@ -1329,6 +1867,9 @@ class ServingEngine:
         held_head = None      # queue head already counted as held
         while (queue or pending or any(s.active for s in slots)
                or self._inflight):
+            # cancellation + deadline sweep over every request pool, once
+            # per block boundary (host-side only, no device sync)
+            self._police(slots, pending, queue, t0)
             # wave-assign every free slot a queued request; all pending
             # admissions advance together, one chunk per wave dispatch.
             # mid-flight = an admission that starts while other lanes are
@@ -1340,6 +1881,15 @@ class ServingEngine:
                 if not queue:
                     break
                 if not s.active and i not in pending:
+                    # pop invalid heads first: a rejection frees the head
+                    # position for the next queued request immediately
+                    while queue:
+                        err = self._validate(queue[0])
+                        if err is None:
+                            break
+                        self._reject(queue.popleft(), err)
+                    if not queue:
+                        break
                     head = queue[0]
                     grant = None
                     if self.paged:
@@ -1385,20 +1935,37 @@ class ServingEngine:
                             self.stats["kv_reserved_pages_peak"],
                             self._reserved_total)
                         if grant is not None and grant["base"]:
-                            cache = self._grant_prefix(cache, i, grant)
+                            try:
+                                cache = self._grant_prefix(cache, i, grant)
+                            except InjectedFault as e:
+                                # CoW boundary allocation failed: the head
+                                # retires FAILED; aliased pages + the
+                                # reservation roll back refcount-exact
+                                self._reject_started_head(
+                                    queue, i,
+                                    "KV page allocation failed during "
+                                    f"prefix grant: {e}")
+                                continue
                     pending[i] = self._start_admission(
                         i, queue.popleft(),
                         base=grant["base"] if grant else 0)
-                    if self.paged and self.device_sched:
+                    if self.paged and self._dev_active:
                         # pre-grant the lane's whole worst-case reservation
                         # up front (the admission gate already reserved it,
                         # so schedulability is unchanged) — decode then
                         # never allocates, which is what lets block N+1
                         # dispatch without consulting the host allocator
                         req = pending[i]["req"]
-                        self._grow_pages(i, min(
-                            len(req.prompt) + req.max_new_tokens - 1,
-                            self.max_seq))
+                        try:
+                            self._grow_pages(i, min(
+                                len(req.prompt) + req.max_new_tokens - 1,
+                                self.max_seq))
+                        except InjectedFault as e:
+                            self._abort_admission(
+                                pending, i, RequestStatus.FAILED,
+                                "KV page allocation failed at admission "
+                                f"pre-grant: {e}")
+                            continue
                     if any(o.active for o in slots):
                         self.stats["mid_flight_admissions"] += 1
             # one batched prefill wave — in-flight lanes stall for at most
@@ -1419,13 +1986,27 @@ class ServingEngine:
             if any(s.active for s in slots):
                 cache = self._run_decode_block(cache, slots)
                 chunks_since_block = 0
+                if self.on_block is not None:
+                    # test/ops hook at the block boundary (e.g. issue a
+                    # cancel() deterministically at block k)
+                    self.on_block(self, self.stats["decode_blocks"])
             elif self._inflight:
                 # nothing left to dispatch: read back the trailing blocks
                 self._drain_blocks(slots, depth=0)
         wall = time.perf_counter() - t0
         total = sum(len(r.output) for r in requests)
-        ttfts = [r.ttft_s for r in requests]
+        ttfts = [r.ttft_s for r in requests if r.ttft_s is not None]
         st = self.stats
+        # authoritative status recount from the request objects themselves
+        # (the incremental counters above can only agree, but recounting
+        # makes the invariant structural: sum(status counters) == len(requests))
+        counts = {s: 0 for s in RequestStatus}
+        for r in requests:
+            counts[r.status] += 1
+        for s_, key in _STATUS_COUNTERS.items():
+            st[key] = counts[s_]
+        if fi is not None:
+            st["faults_injected"] = len(fi.events) - fi_events0
         st.update({
             "wall_s": wall,
             "total_new_tokens": total,

@@ -1,0 +1,577 @@
+"""Fault-tolerant serving: isolation, deadlines, injection, degradation.
+
+The robustness contracts from ISSUE 7, asserted end-to-end against the
+real engine with deterministic injected faults (``serving.FaultInjector``):
+
+* **blast radius**: an invalid request (REJECTED), a NaN-producing lane,
+  a corrupted readback, or a failed page allocation (FAILED) retires only
+  its own request — every surviving request's greedy output is
+  bit-identical to a fault-free run, and ``ServingEngine.audit()`` (the
+  refcount oracle promoted from tests/test_prefix_sharing.py) passes
+  after every retirement;
+* **deadlines + cancellation**: ``deadline_s`` and ``cancel(request)``
+  are observed at block boundaries for queued, pending and live requests
+  (TIMEOUT / CANCELLED, tokens-so-far kept for live lanes);
+* **graceful degradation**: a wedged device-scheduler dispatch or a
+  serving-watchdog trip makes the engine reconcile its one-block-behind
+  host mirror and finish the run on the host-driven path — survivors
+  complete DEGRADED with token-identical output, under both contiguous
+  and paged modes;
+* **fault-free identity**: an attached-but-empty injector changes nothing
+  (the NaN-mask select is an exact identity), so the robustness layer is
+  free when unused.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.models.layers import Ctx
+from repro.serving import (AuditError, FaultInjector, Request,
+                           RequestStatus, ServingEngine)
+
+ROBUSTNESS_KEYS = (
+    "requests_completed", "requests_rejected", "requests_failed",
+    "requests_timed_out", "requests_cancelled", "requests_degraded",
+    "degraded_blocks", "faults_injected", "watchdog_trips",
+    "sched_fallbacks", "integrity_faults")
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    packed = transformer.pack_params(cfg, params)
+    ctx = Ctx(mode="packed", group_size=cfg.group_size,
+              attn_q_chunk=128, attn_kv_chunk=128)
+    return cfg, packed, ctx
+
+
+def _prompts(cfg, seed=0, n=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size,
+                         size=int(rng.integers(3, 9))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _reqs(prompts, max_new=6, **kw):
+    return [Request(prompt=p, max_new_tokens=max_new, **kw)
+            for p in prompts]
+
+
+_ENG_KW = dict(max_seq=32, batch_slots=2, prefill_chunk=4, decode_block=4)
+_PAGED_KW = dict(_ENG_KW, paged=True, page_size=4, kv_pages=24)
+
+
+def _engine(cfg, packed, ctx, **kw):
+    merged = dict(_ENG_KW)
+    merged.update(kw)
+    return ServingEngine(cfg, packed, ctx=ctx, **merged)
+
+
+@pytest.fixture(scope="module")
+def baselines(served_model):
+    """Fault-free outputs per mode for the standard 3-prompt workload
+    (paged and contiguous greedy outputs can differ on the reduced random
+    model, so survivors are always compared within their own mode)."""
+    cfg, packed, ctx = served_model
+    out = {}
+    for name, kw in (("contig", {}),
+                     ("paged", dict(paged=True, page_size=4, kv_pages=24)),
+                     ("shared", dict(paged=True, page_size=4, kv_pages=24,
+                                     enable_prefix_sharing=True))):
+        eng = _engine(cfg, packed, ctx, **kw)
+        reqs = _reqs(_prompts(cfg))
+        eng.run(reqs)
+        assert all(r.status == RequestStatus.OK for r in reqs)
+        out[name] = [r.output.tolist() for r in reqs]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stats + fault-free identity
+# ---------------------------------------------------------------------------
+
+def test_robustness_stats_keys_always_present(served_model):
+    cfg, packed, ctx = served_model
+    for kw in ({}, dict(device_sched=False),
+               dict(paged=True, page_size=4, kv_pages=24)):
+        eng = _engine(cfg, packed, ctx, **kw)
+        eng.run(_reqs(_prompts(cfg)))
+        for k in ROBUSTNESS_KEYS:
+            assert k in eng.stats, k
+        assert eng.stats["requests_completed"] == 3
+        assert all(eng.stats[k] == 0 for k in ROBUSTNESS_KEYS
+                   if k != "requests_completed")
+
+
+def test_empty_injector_is_bit_identical(served_model, baselines):
+    """The injection seams (NaN-mask select, hook calls) are exact
+    identities when nothing is scheduled."""
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  fault_injector=FaultInjector(), audit_on_retire=True)
+    reqs = _reqs(_prompts(cfg))
+    eng.run(reqs)
+    assert [r.output.tolist() for r in reqs] == baselines["paged"]
+    assert eng.stats["faults_injected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Admission-time isolation: REJECTED
+# ---------------------------------------------------------------------------
+
+def test_invalid_requests_rejected_without_blast_radius(served_model,
+                                                        baselines):
+    """Every flavour of invalid request is REJECTED on its own object at
+    admission; the valid requests around it finish bit-identical to the
+    fault-free run."""
+    cfg, packed, ctx = served_model
+    good = _prompts(cfg)
+    bads = [
+        (Request(prompt=np.arange(40, dtype=np.int32)), "max_seq"),
+        (Request(prompt=np.zeros((0,), np.int32)), "at least one"),
+        (Request(prompt=np.asarray([1, 2], np.int32), max_new_tokens=0),
+         "max_new_tokens"),
+        (Request(prompt=np.asarray([1, cfg.vocab_size + 5], np.int32)),
+         "token ids"),
+    ]
+    eng = _engine(cfg, packed, ctx)
+    reqs = [_reqs([good[0]])[0]] + [b for b, _ in bads] + _reqs(good[1:])
+    eng.run(reqs)
+    for b, needle in bads:
+        assert b.done and b.status == RequestStatus.REJECTED
+        assert needle in b.error and len(b.output) == 0
+        assert b.ttft_s is None
+    survivors = [reqs[0]] + reqs[-2:]
+    assert [r.output.tolist() for r in survivors] == baselines["contig"]
+    assert eng.stats["requests_rejected"] == len(bads)
+    assert eng.stats["requests_completed"] == 3
+
+
+def test_oversized_paged_request_rejected_mid_queue(served_model,
+                                                    baselines):
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=8)
+    good = _prompts(cfg)
+    big = Request(prompt=np.arange(1, 20, dtype=np.int32),
+                  max_new_tokens=12)  # worst case exceeds the 7-page pool
+    reqs = [_reqs([good[0]])[0], big] + _reqs(good[1:])
+    eng.run(reqs)
+    assert big.status == RequestStatus.REJECTED and "KV pages" in big.error
+    survivors = [reqs[0]] + reqs[2:]
+    # same workload on the same mode's fault-free engine
+    ref = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=8)
+    ref_reqs = _reqs(good)
+    ref.run(ref_reqs)
+    assert ([r.output.tolist() for r in survivors]
+            == [r.output.tolist() for r in ref_reqs])
+    assert eng.audit()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight isolation: NaN lane, corrupt readback, alloc faults
+# ---------------------------------------------------------------------------
+
+def test_nan_lane_isolated_paged_sharing(served_model, baselines):
+    """ISSUE acceptance: paged+prefix-sharing run with a poisoned (NaN)
+    lane completes every other request bit-identical to the fault-free
+    run, audit() passes, and no pages leak (everything still held is
+    prefix cache)."""
+    cfg, packed, ctx = served_model
+    fi = FaultInjector().inject_nan(lane=1, block=0)
+    eng = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  enable_prefix_sharing=True, fault_injector=fi,
+                  audit_on_retire=True)
+    reqs = _reqs(_prompts(cfg))
+    eng.run(reqs)
+    statuses = [r.status for r in reqs]
+    assert statuses.count(RequestStatus.FAILED) == 1
+    failed = reqs[statuses.index(RequestStatus.FAILED)]
+    assert "non-finite" in failed.error
+    survivors = [(i, r) for i, r in enumerate(reqs)
+                 if r.status == RequestStatus.OK]
+    assert len(survivors) == 2
+    for i, r in survivors:
+        assert r.output.tolist() == baselines["shared"][i]
+    # the failed lane kept the tokens it had before the poisoned block —
+    # a strict prefix of its fault-free output
+    pre = failed.output.tolist()
+    assert pre == baselines["shared"][statuses.index(
+        RequestStatus.FAILED)][:len(pre)]
+    assert eng.stats["integrity_faults"] == 1
+    assert eng.stats["faults_injected"] == 1
+    # no page leaks: every page still referenced is prefix cache
+    summary = eng.audit()
+    assert summary["ok"]
+    assert summary["used_pages"] == summary["index_pages"]
+    assert (eng._pool.free_pages + summary["used_pages"]
+            == eng._pool.usable)
+
+
+def test_nan_lane_prefix_rollback(served_model):
+    """A poisoned lane's prefix registrations are withdrawn: a later
+    request with the same prompt re-prefills instead of aliasing the
+    faulted KV, and still produces correct tokens."""
+    cfg, packed, ctx = served_model
+    p = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
+    ref = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  enable_prefix_sharing=True)
+    ref_reqs = [Request(prompt=p, max_new_tokens=6)]
+    ref.run(ref_reqs)
+    want = ref_reqs[0].output.tolist()
+
+    fi = FaultInjector().inject_nan(lane=0, block=0)
+    eng = _engine(cfg, packed, ctx, batch_slots=1, paged=True, page_size=4,
+                  kv_pages=24, enable_prefix_sharing=True,
+                  fault_injector=fi, audit_on_retire=True)
+    reqs = [Request(prompt=p, max_new_tokens=6),
+            Request(prompt=p.copy(), max_new_tokens=6)]
+    eng.run(reqs)
+    assert reqs[0].status == RequestStatus.FAILED
+    assert reqs[1].status == RequestStatus.OK
+    assert reqs[1].output.tolist() == want
+    assert eng.audit()["ok"]
+
+
+def test_corrupt_readback_flags_offending_lane_only(served_model,
+                                                    baselines):
+    cfg, packed, ctx = served_model
+    fi = FaultInjector().corrupt_readback(0, lane=0)
+    eng = _engine(cfg, packed, ctx, fault_injector=fi)
+    reqs = _reqs(_prompts(cfg))
+    eng.run(reqs)
+    statuses = [r.status for r in reqs]
+    assert statuses.count(RequestStatus.FAILED) == 1
+    failed = reqs[statuses.index(RequestStatus.FAILED)]
+    assert "out of range" in failed.error
+    for i, r in enumerate(reqs):
+        if r.status == RequestStatus.OK:
+            assert r.output.tolist() == baselines["contig"][i]
+    assert eng.stats["integrity_faults"] == 1
+
+
+@pytest.mark.parametrize("device_sched", [True, False])
+def test_alloc_fault_contained_to_admission(served_model, device_sched):
+    """A failed page allocation retires only the admission that needed it
+    (device mode: the up-front pre-grant; host mode: the chunk-growth
+    path); the pool rolls back refcount-exact either way."""
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg)
+    ref = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  device_sched=device_sched)
+    ref_reqs = _reqs(prompts)
+    ref.run(ref_reqs)
+    base = [r.output.tolist() for r in ref_reqs]
+
+    fi = FaultInjector().fail_alloc(0)
+    eng = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  device_sched=device_sched, fault_injector=fi,
+                  audit_on_retire=True)
+    reqs = _reqs(prompts)
+    eng.run(reqs)
+    statuses = [r.status for r in reqs]
+    assert statuses.count(RequestStatus.FAILED) == 1
+    failed = reqs[statuses.index(RequestStatus.FAILED)]
+    assert "allocation failed" in failed.error and len(failed.output) == 0
+    for i, r in enumerate(reqs):
+        if r.status == RequestStatus.OK:
+            assert r.output.tolist() == base[i]
+    assert eng.stats["faults_injected"] == 1
+    assert eng.audit()["ok"]
+    assert eng._pool.free_pages == eng._pool.usable  # nothing leaked
+
+
+# ---------------------------------------------------------------------------
+# Deadlines + cancellation
+# ---------------------------------------------------------------------------
+
+def test_queued_deadline_times_out_without_running(served_model):
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx, batch_slots=1)
+    prompts = _prompts(cfg)
+    reqs = [Request(prompt=prompts[0], max_new_tokens=6),
+            Request(prompt=prompts[1], max_new_tokens=6, deadline_s=1e-9)]
+    eng.run(reqs)
+    assert reqs[0].status == RequestStatus.OK
+    assert reqs[1].status == RequestStatus.TIMEOUT
+    assert "queue" in reqs[1].error and len(reqs[1].output) == 0
+    assert eng.stats["requests_timed_out"] == 1
+
+
+def test_mid_flight_deadline_keeps_tokens_so_far(served_model, baselines):
+    """A live lane whose deadline expires retires TIMEOUT with the tokens
+    it produced; the other lane is untouched.  A hung dispatch (injected)
+    burns the wall clock deterministically."""
+    cfg, packed, ctx = served_model
+    fi = FaultInjector().hang_dispatch(1, seconds=0.3)
+    fi.armed = False
+    eng = _engine(cfg, packed, ctx, fault_injector=fi)
+    prompts = _prompts(cfg)
+    eng.run(_reqs(prompts))  # warm: jit compile must not eat the deadline
+    fi.armed = True
+    reqs = [Request(prompt=prompts[0], max_new_tokens=12, deadline_s=0.15),
+            Request(prompt=prompts[1], max_new_tokens=6)]
+    eng.run(reqs)
+    assert reqs[0].status == RequestStatus.TIMEOUT
+    assert "mid-decode" in reqs[0].error
+    assert 0 < len(reqs[0].output) < 12
+    assert reqs[1].status == RequestStatus.OK
+    assert reqs[1].output.tolist() == baselines["contig"][1]
+
+
+def test_cancel_at_block_boundary(served_model, baselines):
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg)
+    reqs = [Request(prompt=prompts[0], max_new_tokens=12),
+            Request(prompt=prompts[1], max_new_tokens=6)]
+
+    def cancel_at_block_1(engine, block):
+        if block == 1:
+            engine.cancel(reqs[0])
+
+    eng = _engine(cfg, packed, ctx, on_block=cancel_at_block_1)
+    eng.run(reqs)
+    assert reqs[0].status == RequestStatus.CANCELLED
+    assert 0 < len(reqs[0].output) < 12  # kept tokens so far, stopped early
+    assert reqs[1].status == RequestStatus.OK
+    assert reqs[1].output.tolist() == baselines["contig"][1]
+    assert eng.stats["requests_cancelled"] == 1
+
+
+def test_cancel_queued_request_never_runs(served_model):
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg)
+    queued = Request(prompt=prompts[1], max_new_tokens=6)
+    queued.cancelled = True  # cancelled before run() starts
+    eng = _engine(cfg, packed, ctx, batch_slots=1)
+    reqs = [Request(prompt=prompts[0], max_new_tokens=6), queued]
+    eng.run(reqs)
+    assert queued.status == RequestStatus.CANCELLED
+    assert len(queued.output) == 0 and queued.ttft_s is None
+    assert reqs[0].status == RequestStatus.OK
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation to the host-driven scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_wedged_dispatch_degrades_to_host_path(served_model, paged):
+    """ISSUE acceptance: a forced device-scheduler fault (dispatch that
+    keeps failing past the retry budget) triggers mid-run fallback; the
+    survivors finish DEGRADED with tokens identical to the fault-free
+    run, under both contiguous and paged modes."""
+    cfg, packed, ctx = served_model
+    kw = dict(paged=True, page_size=4, kv_pages=24) if paged else {}
+    prompts = _prompts(cfg)
+    ref = _engine(cfg, packed, ctx, **kw)
+    ref_reqs = _reqs(prompts, max_new=10)
+    ref.run(ref_reqs)
+    base = [r.output.tolist() for r in ref_reqs]
+
+    fi = FaultInjector().fail_dispatch(1, persistent=3)
+    eng = _engine(cfg, packed, ctx, dispatch_retries=2, fault_injector=fi,
+                  **kw)
+    reqs = _reqs(prompts, max_new=10)
+    eng.run(reqs)
+    assert all(r.status == RequestStatus.DEGRADED for r in reqs)
+    assert [r.output.tolist() for r in reqs] == base
+    assert eng.stats["sched_fallbacks"] == 1
+    assert eng.stats["degraded_blocks"] >= 1
+    assert eng.stats["requests_degraded"] == len(reqs)
+    if paged:
+        assert eng.audit()["ok"]
+    # the next run starts device-resident again (per-run fallback);
+    # disarm the injector or its per-run ordinals replay the schedule
+    fi.armed = False
+    reqs2 = _reqs(prompts, max_new=10)
+    eng.run(reqs2)
+    assert all(r.status == RequestStatus.OK for r in reqs2)
+    assert [r.output.tolist() for r in reqs2] == base
+    assert eng.stats["sched_fallbacks"] == 0
+
+
+def test_watchdog_trip_degrades_device_path(served_model):
+    """A fused block exceeding block_deadline_s trips the (non-process-
+    killing) serving watchdog and degrades; outputs stay identical."""
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg)
+    fi = FaultInjector().hang_dispatch(1, seconds=0.8)
+    fi.armed = False
+    eng = _engine(cfg, packed, ctx, fault_injector=fi)
+    warm = _reqs(prompts, max_new=10)
+    eng.run(warm)  # compiles both paths cold, no deadline armed yet
+    base = [r.output.tolist() for r in warm]
+    eng.block_deadline_s = 0.35
+    fi.armed = True
+    reqs = _reqs(prompts, max_new=10)
+    eng.run(reqs)
+    # >= 1: after the degrade the host path compiles cold, and that first
+    # host block can legitimately trip the (count-only) watchdog too
+    assert eng.stats["watchdog_trips"] >= 1
+    assert eng.stats["sched_fallbacks"] == 1
+    assert all(r.status == RequestStatus.DEGRADED for r in reqs)
+    assert [r.output.tolist() for r in reqs] == base
+
+
+def test_host_path_dispatch_fault_fails_live_batch(served_model):
+    """On the host-driven path there is no lower service level: a
+    persistently failing dispatch retires the live batch FAILED and the
+    engine keeps serving the queue."""
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg)
+    fi = FaultInjector().fail_dispatch(1, persistent=3)
+    eng = _engine(cfg, packed, ctx, batch_slots=2, device_sched=False,
+                  dispatch_retries=2, fault_injector=fi)
+    reqs = _reqs(prompts, max_new=10)
+    eng.run(reqs)
+    assert [r.status for r in reqs[:2]] == [RequestStatus.FAILED] * 2
+    # the queued third request admits after the batch fails and, with the
+    # fault schedule exhausted, completes
+    assert reqs[2].status == RequestStatus.OK
+    assert eng.stats["requests_failed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# audit() (promoted refcount oracle) + drain guard regression
+# ---------------------------------------------------------------------------
+
+def test_audit_detects_manufactured_violations(served_model):
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx, paged=True, page_size=4, kv_pages=24,
+                  enable_prefix_sharing=True)
+    eng.run(_reqs(_prompts(cfg)))
+    assert eng.audit()["ok"]
+    # leak: a page referenced in the pool with no slot/index provenance
+    (leaked,) = eng._pool.alloc(1)
+    with pytest.raises(AuditError, match="diverged|leak"):
+        eng.audit()
+    eng._pool.decref(leaked)
+    assert eng.audit()["ok"]
+    # free-list corruption: duplicate entry (double free)
+    eng._pool._free.append(eng._pool._free[-1])
+    with pytest.raises(AuditError, match="duplicate"):
+        eng.audit()
+    eng._pool._free.pop()
+    assert eng.audit()["ok"]
+    # null page entering the allocator
+    eng._pool._free.append(0)
+    with pytest.raises(AuditError, match="null page"):
+        eng.audit()
+    eng._pool._free.pop()
+    assert eng.audit()["ok"]
+
+
+def test_drain_clobbered_tail_guard_regression(served_model, monkeypatch):
+    """The _process_block fail-fast (engine.py: 'active lane at cache_len
+    >= max_seq') guards the parked-write contract: if retirement were ever
+    skipped for a lane that filled its row, the engine must raise rather
+    than serve tokens read from a clobbered tail.  Simulate exactly that
+    bug by suppressing retirement and folding a block that pushes a lane
+    to max_seq."""
+    import repro.serving.engine as E
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx)
+    eng.run(_reqs(_prompts(cfg)))  # initialize stats/state
+    s = E._Slot()
+    s.request = Request(prompt=np.asarray([1, 2], np.int32),
+                        max_new_tokens=100)
+    s.tokens = [1]
+    s.cache_len = eng.max_seq - 1
+    s.last_token = 1
+    slots = [s] + [E._Slot() for _ in range(eng.slots - 1)]
+    blk = np.ones((eng.slots, eng.decode_block), np.int32)
+    mask = np.zeros((eng.slots, eng.decode_block), bool)
+    mask[0, 0] = True  # one append -> cache_len == max_seq
+    bad = np.zeros((eng.slots,), bool)
+    monkeypatch.setattr(eng, "_free_slot",
+                        lambda *a, **k: None)  # the simulated bug
+    with pytest.raises(RuntimeError, match="clobber"):
+        eng._process_block(slots, blk, mask, bad, gating=True)
+
+
+# ---------------------------------------------------------------------------
+# Random injected-fault schedules over a warm paged+sharing engine
+# ---------------------------------------------------------------------------
+
+def _fault_schedule_run(cfg, packed, ctx, base_eng, fault_eng, seed):
+    """One adversarial round: seeded random fault schedule over the warm
+    paged+sharing engine; survivors must be token-identical to the
+    fault-free run, FAILED lanes must hold a prefix of their fault-free
+    output, and audit() must pass after every retirement and at the end."""
+    rng = np.random.default_rng(seed)
+    tmpl = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    prompts = []
+    for _ in range(5):
+        if rng.random() < 0.5:  # shared-template workload shape
+            tail = rng.integers(1, cfg.vocab_size,
+                                size=int(rng.integers(1, 4)))
+            prompts.append(np.concatenate([tmpl, tail]).astype(np.int32))
+        else:
+            prompts.append(rng.integers(
+                1, cfg.vocab_size,
+                size=int(rng.integers(3, 9))).astype(np.int32))
+    news = [int(rng.integers(3, 9)) for _ in prompts]
+
+    base_reqs = [Request(prompt=p, max_new_tokens=n)
+                 for p, n in zip(prompts, news)]
+    base_eng.run(base_reqs)
+    base = [r.output.tolist() for r in base_reqs]
+
+    fi = FaultInjector.random_schedule(int(seed), slots=fault_eng.slots,
+                                       n_faults=3, max_block=6,
+                                       max_alloc=10)
+    fault_eng.fault_injector = fi
+    reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, news)]
+    fault_eng.run(reqs)
+    for r, b in zip(reqs, base):
+        assert r.done and r.status is not None
+        out = r.output.tolist()
+        if r.status in (RequestStatus.OK, RequestStatus.DEGRADED):
+            assert out == b, f"survivor diverged under seed {seed}"
+        elif r.status == RequestStatus.FAILED:
+            # kept tokens are exactly the fault-free prefix
+            assert out == b[:len(out)], f"failed-lane tokens diverged " \
+                                        f"under seed {seed}"
+        else:  # no deadlines/cancels in this schedule
+            raise AssertionError(f"unexpected status {r.status}")
+    summary = fault_eng.audit()
+    assert summary["ok"]
+    # no slot-held leaks: whatever is still referenced is prefix cache
+    assert summary["used_pages"] == summary["index_pages"]
+
+
+def test_random_fault_schedules_seeded_sweep(served_model):
+    cfg, packed, ctx = served_model
+    shared_kw = dict(paged=True, page_size=4, kv_pages=24,
+                     enable_prefix_sharing=True)
+    base_eng = _engine(cfg, packed, ctx, **shared_kw)
+    fault_eng = _engine(cfg, packed, ctx, audit_on_retire=True,
+                        **shared_kw)
+    for seed in range(6):
+        _fault_schedule_run(cfg, packed, ctx, base_eng, fault_eng, seed)
+
+
+def test_random_fault_schedules_hypothesis(served_model):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg, packed, ctx = served_model
+    shared_kw = dict(paged=True, page_size=4, kv_pages=24,
+                     enable_prefix_sharing=True)
+    base_eng = _engine(cfg, packed, ctx, **shared_kw)
+    fault_eng = _engine(cfg, packed, ctx, audit_on_retire=True,
+                        **shared_kw)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(100, 10_000))
+    def inner(seed):
+        _fault_schedule_run(cfg, packed, ctx, base_eng, fault_eng, seed)
+
+    inner()

@@ -344,12 +344,15 @@ def test_paged_admission_defers_until_pages_free(served_model):
 
 
 def test_paged_request_larger_than_pool_rejected(served_model):
+    from repro.serving import RequestStatus
     cfg, packed, ctx = served_model
     eng = ServingEngine(cfg, packed, max_seq=32, batch_slots=1, ctx=ctx,
                         paged=True, page_size=4, kv_pages=3)
-    with pytest.raises(ValueError, match="KV pages"):
-        eng.run([Request(prompt=np.arange(1, 12, dtype=np.int32),
-                         max_new_tokens=4)])
+    (r,) = eng.run([Request(prompt=np.arange(1, 12, dtype=np.int32),
+                            max_new_tokens=4)])
+    assert r.done and r.status == RequestStatus.REJECTED
+    assert "KV pages" in r.error and len(r.output) == 0
+    assert eng.stats["requests_rejected"] == 1
 
 
 def test_paged_requires_attention_blocks(served_model):

@@ -113,13 +113,21 @@ def test_serving_engine_end_to_end(served_model):
 
 
 def test_prompt_longer_than_max_seq_rejected(served_model):
+    """Invalid requests are REJECTED on the request object at admission
+    time (never raising out of run(), which would abandon in-flight
+    lanes) and never touch a slot or the device."""
+    from repro.serving import RequestStatus
     cfg, packed, ctx = served_model
     eng = ServingEngine(cfg, packed, max_seq=8, batch_slots=1, ctx=ctx)
-    with pytest.raises(ValueError, match="max_seq"):
-        eng.run([Request(prompt=np.arange(9, dtype=np.int32))])
-    with pytest.raises(ValueError, match="max_new_tokens"):
-        eng.run([Request(prompt=np.arange(3, dtype=np.int32),
-                         max_new_tokens=0)])
+    (r,) = eng.run([Request(prompt=np.arange(9, dtype=np.int32))])
+    assert r.done and r.status == RequestStatus.REJECTED
+    assert "max_seq" in r.error and len(r.output) == 0
+    assert eng.stats["requests_rejected"] == 1
+    assert eng.stats["admissions"] == 0
+    (r,) = eng.run([Request(prompt=np.arange(3, dtype=np.int32),
+                            max_new_tokens=0)])
+    assert r.status == RequestStatus.REJECTED
+    assert "max_new_tokens" in r.error
 
 
 # ---------------------------------------------------------------------------
