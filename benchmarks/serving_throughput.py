@@ -26,12 +26,25 @@ count:
     the unique-page footprint drop (the deltas report all of it; the
     wins grow with slot count and with real accelerator prefill cost,
     which is the regime the paper's capacity argument targets).
-  * ``*_faults`` — with ``--inject-faults``, the fused (and paged)
-    configuration reruns under a deterministic injected-fault schedule
-    (one page-alloc failure, one NaN lane, one corrupted readback via
+  * ``*_faults`` — with ``--inject-faults`` (or ``--inject-faults
+    static``), the fused (and paged) configuration reruns under a
+    deterministic *persistent* injected-fault schedule (one page-alloc
+    failure, one NaN lane, one corrupted readback via
     ``serving.FaultInjector``): the poisoned requests retire FAILED, every
     other request completes, and the row's ``requests_*`` counters +
     ``faults_injected`` report the containment.
+  * ``*_chaos`` — with ``--inject-faults transient`` (``all`` runs both
+    vocabularies), the same configurations rerun under a *self-clearing*
+    schedule (a device dispatch outage longer than the retry budget, then
+    a NaN lane and a corrupted readback after it clears) against the
+    self-healing engine: device scheduling + budgeted request retry with
+    progress replay + mid-run re-promotion.  The in-benchmark assertions
+    require total recovery — zero FAILED/TIMEOUT, >= 1 retry, >= 1 canary
+    probe, >= 1 re-promotion, device breaker closed at exit — and the
+    recovery gauges (``requests_retried`` / ``retries_total`` /
+    ``retry_backoff_s`` / ``retries_denied_breaker`` / ``repromotions`` /
+    ``canary_probes`` / ``breaker_state`` / ``retry_breaker_state``)
+    appear on every row of every mode.
   * ``*_device`` — with ``--device-sched``, each of the above reruns with
     the device-resident scheduler: slot bookkeeping lives in device arrays
     threaded block-to-block and the host reads results one block behind,
@@ -81,8 +94,12 @@ from repro.serving import FaultInjector, Request, ServingEngine
 
 # bump when row keys change shape/meaning so trajectory tooling can key on
 # it; 2 = robustness gauges (requests_* / degraded_blocks / faults_injected
-# / watchdog_trips / sched_fallbacks on every row) + --inject-faults modes
-SCHEMA_VERSION = 2
+# / watchdog_trips / sched_fallbacks on every row) + --inject-faults modes;
+# 3 = recovery gauges (requests_retried / retries_total / retry_backoff_s /
+# retries_denied_breaker / repromotions / canary_probes / breaker_state /
+# retry_breaker_state on every row) + --inject-faults {static,transient,all}
+# vocabulary with self-healing *_chaos rows
+SCHEMA_VERSION = 3
 
 
 def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
@@ -112,7 +129,7 @@ def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             max_prompt, max_new, seed, mode, paged=False, page_size=16,
             kv_pages=None, shared_prefix_len=0, prefix_sharing=False,
-            device_sched=False, fault_injector=None):
+            device_sched=False, fault_injector=None, engine_kw=None):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new,
                          shared_prefix_len=shared_prefix_len)
@@ -123,7 +140,8 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
                         page_size=page_size, kv_pages=kv_pages,
                         enable_prefix_sharing=prefix_sharing,
                         device_sched=device_sched,
-                        fault_injector=fault_injector)
+                        fault_injector=fault_injector,
+                        **(engine_kw or {}))
     # warmup: chunked prefill + fused decode compile O(1) shapes, so two
     # tiny requests cover every program the timed run can hit.  The fault
     # schedule is disarmed for warmup (ordinals reset per run, so an armed
@@ -186,6 +204,17 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         "watchdog_trips": s["watchdog_trips"],
         "sched_fallbacks": s["sched_fallbacks"],
         "integrity_faults": s["integrity_faults"],
+        # recovery gauges (schema 3) — budgeted retry with progress replay,
+        # mid-run re-promotion, and the two circuit breakers; like the
+        # robustness gauges they are present on every row unconditionally
+        "requests_retried": s["requests_retried"],
+        "retries_total": s["retries_total"],
+        "retry_backoff_s": s["retry_backoff_s"],
+        "retries_denied_breaker": s["retries_denied_breaker"],
+        "repromotions": s["repromotions"],
+        "canary_probes": s["canary_probes"],
+        "breaker_state": s["breaker_state"],
+        "retry_breaker_state": s["retry_breaker_state"],
     }
     if paged:
         # schedulable slots at the contiguous configuration's KV budget:
@@ -254,14 +283,24 @@ def main():
                          "also run the prefix-sharing engine "
                          "(enable_prefix_sharing=True) to report TTFT and "
                          "pool-utilization deltas vs plain paged")
-    ap.add_argument("--inject-faults", action="store_true",
+    ap.add_argument("--inject-faults", nargs="?", const="static",
+                    choices=("static", "transient", "all"), default=None,
                     help="also rerun the fused (and, with --paged, paged) "
                          "configuration under a deterministic fault "
-                         "schedule (one page-alloc failure + one NaN lane "
-                         "+ one corrupted readback; modes suffixed "
-                         "_faults): the engine must finish every other "
-                         "request and the row reports the requests_* "
-                         "status counters and faults_injected")
+                         "schedule.  'static' (the default when the flag "
+                         "is given bare): persistent faults with retries "
+                         "OFF (one page-alloc failure + one NaN lane + one "
+                         "corrupted readback; modes suffixed _faults) — "
+                         "the engine must finish every other request and "
+                         "the row reports the requests_* status counters.  "
+                         "'transient': a self-clearing schedule (device "
+                         "dispatch outage + NaN lane + corrupted readback) "
+                         "against the self-healing engine (budgeted retry "
+                         "with progress replay, device scheduling, mid-run "
+                         "re-promotion; modes suffixed _chaos) — every "
+                         "request must terminate OK/DEGRADED with at "
+                         "least one retry, one canary probe and one "
+                         "re-promotion.  'all': both.")
     ap.add_argument("--device-sched", action="store_true",
                     help="also run each configuration with the device-"
                          "resident scheduler (slot bookkeeping threaded "
@@ -364,7 +403,7 @@ def main():
                         shared["prefill_tokens_skipped"],
                     "prefix_hit_rate": shared["prefix_hit_rate"],
                 }
-        if args.inject_faults:
+        if args.inject_faults in ("static", "all"):
             # deterministic schedule: an admission-time page-alloc fault, a
             # NaN lane mid-decode, and one corrupted readback.  Alloc
             # faults need the paged engine; the NaN/corrupt guards fire in
@@ -392,6 +431,47 @@ def main():
                         + frow["requests_degraded"]) == args.n_requests, (
                     "fault run did not terminate every request")
                 configs.append(frow)
+        if args.inject_faults in ("transient", "all"):
+            # self-healing chaos: a transient schedule (a device dispatch
+            # outage longer than the dispatch retry budget, a NaN lane and
+            # a corrupted readback after the outage clears) against the
+            # recovery-enabled engine — device scheduling so the outage
+            # degrades to the host path, budgeted retries with progress
+            # replay so poisoned requests re-queue, and a 1-block probe
+            # cooldown so the canary re-promotes the moment the outage
+            # clears.  The contract is total recovery: no FAILED, no
+            # TIMEOUT, at least one retry, one canary and one
+            # re-promotion actually exercised.
+            def _chaos():
+                return (FaultInjector()
+                        .dispatch_outage(1, 3)
+                        .inject_nan(lane=min(1, slots - 1), block=5)
+                        .corrupt_readback(6))
+            chaos_kw = dict(max_retries=3, retry_backoff_s=0.0,
+                            probe_cooldown_blocks=1)
+            chaos_cfgs = [("fused_chaos", {})]
+            if args.paged:
+                chaos_cfgs.append(
+                    ("paged_chaos",
+                     dict(paged=True, page_size=args.page_size,
+                          kv_pages=args.kv_pages)))
+            for cmode, ckw in chaos_cfgs:
+                crow = run_one(cfg, packed, slots=slots,
+                               decode_block=args.decode_block,
+                               prefill_chunk=args.prefill_chunk,
+                               mode=cmode, fault_injector=_chaos(),
+                               device_sched=True, engine_kw=chaos_kw,
+                               **ckw, **common)
+                assert crow["requests_failed"] == 0, crow
+                assert crow["requests_timed_out"] == 0, crow
+                assert (crow["requests_completed"]
+                        + crow["requests_degraded"]) == args.n_requests, (
+                    "chaos run did not self-heal every request")
+                assert crow["requests_retried"] >= 1, crow
+                assert crow["canary_probes"] >= 1, crow
+                assert crow["repromotions"] >= 1, crow
+                assert crow["breaker_state"] == "closed", crow
+                configs.append(crow)
         for r in configs:
             rows.append(r)
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"

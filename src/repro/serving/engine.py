@@ -168,6 +168,31 @@ paged-mode only; ``{host}``/``{device}`` marks where each step runs:
     ACTIVE --cancel()/deadline sweep at a block boundary {host}--> FREE,
            request DONE(CANCELLED | TIMEOUT)  [tokens so far kept; KV
             valid, so prefix registrations STAY]
+    DONE(FAILED | TIMEOUT*) --budgeted RETRY {host}: retries < budget and
+           the retry breaker not open (*TIMEOUT only with
+           ``retry_timeouts``)--> RETRY-WAIT  [the terminal stamp is
+           withdrawn; pages already rolled back refcount-exact through
+           the shared release path; the withdrawn attempt's error joins
+           ``retry_errors``]
+    RETRY-WAIT --seeded-deterministic exponential backoff elapses
+           {host}--> QUEUED  [admission replays prompt + tokens-so-far
+           as the new prefill, so the KV is rebuilt and greedy output
+           continues token-identically to an uninterrupted run; prefix
+           sharing makes the replay cheap when the prompt's pages are
+           still cached; the deadline budget restarts per attempt]
+    (engine degraded, ``repromote``) --device breaker half-open after its
+           cooldown {host}--> PROBE: one canary dispatch {device} through
+           the real dispatch seams (injector hook, watchdog) but NEVER
+           the real fused block (its donated state/cache must survive a
+           failing probe)
+    PROBE --success--> PROMOTE {host->device}: resident state pytree +
+           block table rebuilt/re-uploaded from the host mirror, live
+           lanes topped up to their full page reservation, scheduling
+           handed back to the device; ``steady_state_syncs_per_block``
+           returns to 0.0 and completions are stamped OK again
+    PROBE --failure--> breaker re-opens with doubled cooldown {host}
+           [persistent faults converge to stable host-driven service
+            with exponentially rarer, bounded probing]
 
 Engine-level degradation (device-resident mode only): a dispatch that
 still fails after ``dispatch_retries`` re-issues, or a fused block that
@@ -177,11 +202,14 @@ then *reconciles* — drains every in-flight readback, after which the
 host mirror is exact (each device transition is a pure function of the
 drained blocks) — drops the resident state, and finishes the run on the
 ``device_sched=False`` host-driven path.  Surviving requests complete
-with token-identical greedy output, stamped DEGRADED; the next ``run()``
-starts device-resident again.  On the host path the same two triggers
-have no lower service level to fall to: a watchdog trip is only counted
-(the block did complete), a persistently failing dispatch retires the
-live batch FAILED and keeps serving the queue.
+with token-identical greedy output, stamped DEGRADED; with ``repromote``
+(the default) the engine probes device health per the PROBE/PROMOTE
+transitions above and returns to device-resident scheduling mid-run once
+the cause clears; the next ``run()`` starts device-resident regardless.
+On the host path the same two triggers have no lower service level to
+fall to: a watchdog trip is only counted (the block did complete), a
+persistently failing dispatch retires the live batch FAILED and keeps
+serving the queue (feeding the retry path when a budget is set).
 
 With ``device_sched=False`` the device pytree is not built: the host
 arrays are rebuilt and uploaded per block (the pre-PR behaviour), which
@@ -206,7 +234,10 @@ page-starved admission deferrals).  Robustness gauges are present in every
 mode: one ``requests_*`` counter per terminal status (recounted from the
 request objects at run end, so counters and statuses can never disagree),
 ``degraded_blocks`` / ``sched_fallbacks`` / ``watchdog_trips`` /
-``integrity_faults`` / ``faults_injected``.  ``ServingEngine.audit()``
+``integrity_faults`` / ``faults_injected``, and recovery gauges
+(``requests_retried`` / ``retries_total`` / ``retry_backoff_s`` /
+``retries_denied_breaker`` / ``repromotions`` / ``canary_probes`` /
+``breaker_state`` / ``retry_breaker_state``).  ``ServingEngine.audit()``
 re-derives the page-pool refcounts from the block tables and prefix trie
 and raises :class:`AuditError` on any leak / double-free / null-page
 violation (``audit_on_retire=True`` runs it after every fault-path
@@ -229,7 +260,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.models.layers import Ctx
-from repro.runtime.fault import Watchdog, with_retries
+from repro.runtime.fault import (CircuitBreaker, Watchdog, backoff_delay,
+                                 with_retries)
 from repro.serving.faultinject import FaultInjector, InjectedFault
 
 _SEED_MOD = 2 ** 31 - 1
@@ -279,7 +311,13 @@ class Request:                     # field-wise __eq__ ambiguous, and queue
     #                                    deterministic default if None
     deadline_s: Optional[float] = None  # wall-clock budget from run()
     #                                     start; checked at block/wave
-    #                                     boundaries -> TIMEOUT
+    #                                     boundaries -> TIMEOUT.  A retried
+    #                                     attempt's budget restarts when the
+    #                                     retry is scheduled (per-attempt
+    #                                     deadline, or every retry of a
+    #                                     TIMEOUT would be stillborn)
+    max_retries: Optional[int] = None  # per-request override of the
+    #                                    engine-level retry budget
     # filled by the engine:
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None     # time to first token (incl. queueing)
@@ -287,6 +325,11 @@ class Request:                     # field-wise __eq__ ambiguous, and queue
     status: Optional[RequestStatus] = None
     error: Optional[str] = None        # human-readable cause for non-OK
     cancelled: bool = False            # set via ServingEngine.cancel()
+    attempts: int = 0                  # admissions started (1 = no retry)
+    retries: int = 0                   # re-queues granted by the engine
+    retry_errors: List[str] = dataclasses.field(default_factory=list)
+    #                                    error history of withdrawn attempts
+    #                                    (the final error stays in ``error``)
 
 
 class _Slot:
@@ -527,6 +570,15 @@ class ServingEngine:
                  kv_quant: bool = False,
                  block_deadline_s: Optional[float] = None,
                  dispatch_retries: int = 2,
+                 dispatch_backoff_s: float = 0.0,
+                 max_retries: int = 0,
+                 retry_timeouts: bool = False,
+                 retry_backoff_s: float = 0.02,
+                 repromote: bool = True,
+                 probe_cooldown_blocks: int = 2,
+                 retry_breaker_threshold: int = 4,
+                 retry_breaker_window: int = 16,
+                 retry_breaker_cooldown: int = 8,
                  fault_injector: Optional[FaultInjector] = None,
                  audit_on_retire: bool = False,
                  on_block: Optional[Callable] = None):
@@ -589,9 +641,28 @@ class ServingEngine:
         # block's bookkeeping (monitoring / deterministic cancel seam).
         self.block_deadline_s = block_deadline_s
         self.dispatch_retries = max(0, int(dispatch_retries))
+        self.dispatch_backoff_s = float(dispatch_backoff_s)
         self.fault_injector = fault_injector
         self.audit_on_retire = bool(audit_on_retire)
         self.on_block = on_block
+        # -- recovery layer -----------------------------------------------
+        # max_retries budgets request re-queues after a FAILED (and, with
+        # retry_timeouts, TIMEOUT) retirement: the re-queued attempt replays
+        # prompt + tokens-emitted-so-far as its prefill, so greedy output is
+        # token-identical to an uninterrupted run.  retry_backoff_s seeds a
+        # deterministic exponential backoff before re-admission.  repromote
+        # lets a degraded run probe device health with a canary dispatch and
+        # return to device-resident scheduling once the cause clears; both
+        # paths are gated by circuit breakers so a persistent fault
+        # converges to stable host-driven service instead of thrashing.
+        self.max_retries = max(0, int(max_retries))
+        self.retry_timeouts = bool(retry_timeouts)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.repromote = bool(repromote)
+        self.probe_cooldown_blocks = max(1, int(probe_cooldown_blocks))
+        self.retry_breaker_threshold = max(1, int(retry_breaker_threshold))
+        self.retry_breaker_window = max(1, int(retry_breaker_window))
+        self.retry_breaker_cooldown = max(1, int(retry_breaker_cooldown))
 
         cfg_, ctx_ = self.cfg, self.ctx
         max_seq_, block_ = self.max_seq, self.decode_block
@@ -622,11 +693,14 @@ class ServingEngine:
 
         @functools.partial(jax.jit, donate_argnums=(2,))
         def _prefill_chunks(params, tokens, cache, bt, offsets, admit_mask,
-                            last_idx, seeds, temps):
+                            last_idx, seeds, temps, emit_idx):
             """One admission wave: a (slots, C) chunk batch written in place
             at per-row offsets; rows not admitting are masked.  First tokens
             for rows whose prompt ends in this chunk are sampled on device
-            (emitted index 0).  Weights are pre-decoded once per wave (exact
+            at per-row emitted index ``emit_idx`` — 0 for a fresh admission,
+            the carried-token count for a retry replay (so temperature
+            sampling folds in the same per-token key an uninterrupted run
+            would have used).  Weights are pre-decoded once per wave (exact
             f32-GEMM path), like the decode block.  In paged mode ``bt`` is
             the (slots, pages_per_slot) block table and the chunk KV is
             scattered into the page pool."""
@@ -635,7 +709,7 @@ class ServingEngine:
                 cfg_, params, tokens, ctx_, cache, offsets=offsets,
                 admit_mask=admit_mask, last_index=last_idx,
                 page_table=bt if paged_ else None)
-            first = _sample(logits, seeds, jnp.zeros_like(seeds), temps)
+            first = _sample(logits, seeds, emit_idx, temps)
             return first, cache
 
         def _make_tick(params, bt, max_new, temps, seeds, nan_mask):
@@ -737,19 +811,20 @@ class ServingEngine:
             return state, blk.T, mask.T, bad, cache
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _admit_lanes(state, first, upd, activate, cache_len, max_new,
-                         temps, seeds):
+        def _admit_lanes(state, first, upd, activate, cache_len, emit0,
+                         max_new, temps, seeds):
             """Merge completed admissions into the device scheduler state:
             rows under ``upd`` take the wave's on-device first token as
             ``last_token`` (the token never visits the host on its way into
-            decode), reset their counters, and activate — unless the
-            request already finished at prefill (``activate`` false)."""
+            decode), reset their counters (``emit0`` is 1 for a fresh
+            admission, carried + 1 for a retry replay), and activate —
+            unless the request already finished at prefill (``activate``
+            false)."""
             sel = lambda new, old: jnp.where(upd, new, old)
             return {
                 "last_token": sel(first, state["last_token"]),
                 "cache_len": sel(cache_len, state["cache_len"]),
-                "emitted": sel(jnp.ones_like(state["emitted"]),
-                               state["emitted"]),
+                "emitted": sel(emit0, state["emitted"]),
                 "active": jnp.where(upd, activate, state["active"]),
                 "max_new": sel(max_new, state["max_new"]),
                 "temps": jnp.where(upd, temps, state["temps"]),
@@ -811,6 +886,13 @@ class ServingEngine:
         # production NaN-injection mask: all-False, allocated once (the
         # in-block jnp.where select is then an exact identity)
         self._no_nan = jnp.zeros((self.slots,), jnp.bool_)
+        # canary probe: a tiny dedicated jit (NOT the real fused block —
+        # that donates the live state and cache, which a failing probe
+        # must never put at risk).  It exercises the same dispatch seam
+        # (fi.on_dispatch, the watchdog deadline) the real block does, so
+        # a wedged device fails the probe and a recovered one passes it.
+        self._canary_jit = jax.jit(lambda x: (x * 2 + 1).sum())
+        self._canary_arg = jnp.arange(8, dtype=jnp.int32)
 
     def compiled_shapes(self) -> dict:
         """Live jit-cache entry counts (the O(1)-compile invariant; holds
@@ -962,8 +1044,14 @@ class ServingEngine:
         if status is RequestStatus.OK and self._degraded:
             status = RequestStatus.DEGRADED
             self.stats["requests_degraded"] += 1
+        req = slots[i].request
         self._release_slot_pages(i)
         slots[i].free(status, error)
+        if req.retries and status in (RequestStatus.OK,
+                                      RequestStatus.DEGRADED):
+            # a retried request completing is the retry breaker's success
+            # signal: transient faults really are clearing
+            self._retry_breaker.record_success()
 
     def _fault_retire(self, slots, i: int, status: RequestStatus,
                       error: str, rollback_prefix: bool = False) -> None:
@@ -981,8 +1069,10 @@ class ServingEngine:
         if self._dev_active and self._state is not None:
             self._state = self._kill_lane(self._state,
                                           jnp.asarray(i, jnp.int32))
+        req = slots[i].request
         self._free_slot(slots, i, status, error)
         st[_STATUS_COUNTERS[status]] += 1
+        self._maybe_retry(req)
         if self.audit_on_retire:
             self.audit()
 
@@ -996,12 +1086,16 @@ class ServingEngine:
         length and attention masks the rest."""
         admit = pending.pop(i)
         req = admit["req"]
-        req.output = np.zeros((0,), np.int32)
+        # a replayed admission keeps the carried tokens of its withdrawn
+        # attempt (an abort loses this attempt's prefill, not the request's
+        # committed progress); a fresh admission has none
+        req.output = np.asarray(self._carried(req), np.int32)
         req.done = True
         req.status = status
         req.error = error
         self._release_slot_pages(i)
         self.stats[_STATUS_COUNTERS[status]] += 1
+        self._maybe_retry(req)
         if self.audit_on_retire:
             self.audit()
 
@@ -1011,14 +1105,103 @@ class ServingEngine:
         slot already holds — aliased grant pages, the reservation — rolls
         back through the shared release path."""
         req = queue.popleft()
-        req.output = np.zeros((0,), np.int32)
+        req.output = np.asarray(self._carried(req), np.int32)
         req.done = True
         req.status = RequestStatus.FAILED
         req.error = error
         self._release_slot_pages(i)
         self.stats[_STATUS_COUNTERS[RequestStatus.FAILED]] += 1
+        self._maybe_retry(req)
         if self.audit_on_retire:
             self.audit()
+
+    # -- budgeted retry with progress replay (host side) -------------------
+
+    def _carried(self, req: Request) -> list:
+        """Tokens a withdrawn attempt already committed (empty for a fresh
+        request).  A retry replays them as prompt suffix, so the new
+        attempt's first sampled token continues exactly where the failed
+        one stopped."""
+        return getattr(req, "_replay_tokens", None) or []
+
+    def _eff_prompt(self, req: Request):
+        """The prefill the CURRENT attempt runs: the raw prompt, or — for a
+        retry — ``prompt + tokens emitted so far``.  Every admission-side
+        consumer (validation, prefix lookup/registration, chunk waves) uses
+        this view; ``req.prompt`` stays the user's original request.  The
+        worst-case page reservation is invariant under replay:
+        ``eff_plen + remaining - 1 == plen + max_new - 1``."""
+        p = getattr(req, "_replay_prompt", None)
+        return p if p is not None else req.prompt
+
+    def _retry_budget(self, req: Request) -> int:
+        return (int(req.max_retries) if req.max_retries is not None
+                else self.max_retries)
+
+    def _maybe_retry(self, req: Request) -> None:
+        """Budgeted retry: called right after ``req`` was stamped with a
+        terminal status.  If the status is retryable (FAILED; TIMEOUT too
+        with ``retry_timeouts``), budget remains, and the retry circuit
+        breaker is not open, the stamp is withdrawn and the request waits
+        out a seeded-deterministic exponential backoff before re-entering
+        admission with its progress replayed (``_eff_prompt``).  The pages
+        the failed attempt held were already rolled back by the shared
+        release path, so the retry allocates from a clean slate — and
+        prefix sharing makes the replayed prefill cheap when the prompt's
+        pages are still cached."""
+        status = req.status
+        if status not in (RequestStatus.FAILED, RequestStatus.TIMEOUT):
+            return
+        if status is RequestStatus.TIMEOUT and not self.retry_timeouts:
+            return
+        if self._retry_budget(req) <= 0:
+            return
+        # every retryable failure is breaker evidence, whether or not this
+        # particular request has budget left
+        self._retry_breaker.record_failure()
+        if req.retries >= self._retry_budget(req):
+            return
+        if not self._retry_breaker.allow():
+            self.stats["retries_denied_breaker"] += 1
+            return
+        st = self.stats
+        st[_STATUS_COUNTERS[status]] -= 1  # the stamp is withdrawn
+        tokens = req.output.tolist() if req.output is not None else []
+        req.retry_errors.append(
+            f"attempt {req.attempts} [{status.value}]: {req.error}")
+        req.done = False
+        req.status = None
+        req.error = None
+        req.output = None
+        req.retries += 1
+        st["retries_total"] += 1
+        req._replay_tokens = tokens
+        req._replay_prompt = (np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(tokens, np.int32)]) if tokens
+            else np.asarray(req.prompt, np.int32))
+        delay = backoff_delay(self.retry_backoff_s, req.retries - 1,
+                              seed=self.seed * 1000003 + req.seed)
+        st["retry_backoff_s"] += delay
+        now = time.perf_counter()
+        # per-attempt deadline: the budget restarts when the retry rejoins
+        # the queue (measuring it from run start would make every retried
+        # TIMEOUT stillborn)
+        req._deadline_t0 = now + delay
+        self._retryq.append({"req": req, "not_before": now + delay})
+
+    def _pump_retries(self, queue) -> None:
+        """Move retry-wait requests whose backoff elapsed to the admission
+        queue tail (FIFO with fresh arrivals)."""
+        if not self._retryq:
+            return
+        now = time.perf_counter()
+        ready = [e for e in self._retryq if e["not_before"] <= now]
+        if not ready:
+            return
+        self._retryq = [e for e in self._retryq if e["not_before"] > now]
+        for e in ready:
+            queue.append(e["req"])
 
     def _unregister_prefix(self, i: int) -> None:
         """Withdraw the prefix-trie nodes slot i registered (deepest
@@ -1052,17 +1235,22 @@ class ServingEngine:
     def _validate(self, req: Request) -> Optional[str]:
         """Admission gate: return the rejection reason, or None when the
         request is servable.  Order matters — shape checks before content
-        checks (an empty prompt has no min/max)."""
-        if len(req.prompt) < 1:
+        checks (an empty prompt has no min/max).  Checks run against the
+        effective prompt (prompt + carried tokens for a retry replay) —
+        a replay can never fail a check its first attempt passed: its
+        length stays <= the original worst case and its tokens are
+        engine-emitted, hence in-vocab."""
+        prompt = self._eff_prompt(req)
+        if len(prompt) < 1:
             return "prompt must have at least one token"
-        if len(req.prompt) > self.max_seq:
-            return (f"prompt length {len(req.prompt)} > max_seq "
+        if len(prompt) > self.max_seq:
+            return (f"prompt length {len(prompt)} > max_seq "
                     f"{self.max_seq}")
         if req.max_new_tokens < 1:  # prefill always emits a first token
             return "max_new_tokens must be >= 1"
         if self.cfg.frontend == "token" and (
-                int(np.min(req.prompt)) < 0
-                or int(np.max(req.prompt)) >= self.cfg.vocab_size):
+                int(np.min(prompt)) < 0
+                or int(np.max(prompt)) >= self.cfg.vocab_size):
             # out-of-vocab ids make jnp.take fill NaN embeddings; the
             # lane's KV writes (including null-page parks) then poison
             # OTHER lanes through masked-position 0*NaN — reject at
@@ -1083,12 +1271,18 @@ class ServingEngine:
         req.cancelled = True
 
     def _expired(self, req: Request, t0: float) -> bool:
-        return (req.deadline_s is not None
-                and time.perf_counter() - t0 > req.deadline_s)
+        if req.deadline_s is None:
+            return False
+        # retried attempts measure their budget from the moment the retry
+        # was scheduled (``_deadline_t0``), fresh requests from run() start
+        start = getattr(req, "_deadline_t0", None)
+        if start is None:
+            start = t0
+        return time.perf_counter() - start > req.deadline_s
 
     def _police(self, slots, pending: dict, queue, t0: float) -> None:
         """Block-boundary sweep of the cancellation and deadline
-        contracts over all three request pools (queued, pending
+        contracts over all four request pools (queued, retry-wait, pending
         admission, live lane).  Runs host-side only — no device sync; a
         live lane's force-deactivation is a scalar device update."""
         for r in list(queue):
@@ -1096,13 +1290,26 @@ class ServingEngine:
                    RequestStatus.TIMEOUT if self._expired(r, t0) else None)
             if why is not None:
                 queue.remove(r)
-                r.output = np.zeros((0,), np.int32)
+                r.output = np.asarray(self._carried(r), np.int32)
                 r.done = True
                 r.status = why
                 r.error = ("cancelled before admission"
                            if why is RequestStatus.CANCELLED
                            else f"deadline_s={r.deadline_s} expired in queue")
                 self.stats[_STATUS_COUNTERS[why]] += 1
+                self._maybe_retry(r)
+        for e in list(self._retryq):
+            r = e["req"]
+            # a deadline cannot expire while waiting out backoff (the
+            # per-attempt clock starts at not_before), but cancellation is
+            # observed here like in every other pool
+            if r.cancelled:
+                self._retryq.remove(e)
+                r.output = np.asarray(self._carried(r), np.int32)
+                r.done = True
+                r.status = RequestStatus.CANCELLED
+                r.error = "cancelled while waiting to retry"
+                self.stats[_STATUS_COUNTERS[RequestStatus.CANCELLED]] += 1
         for i in list(pending):
             r = pending[i]["req"]
             if r.cancelled:
@@ -1126,8 +1333,11 @@ class ServingEngine:
 
     # -- prefix sharing (host side) ----------------------------------------
 
-    def _prefix_lookup(self, req: Request) -> dict:
-        """Map a prompt to its longest cached prefix, clamped to the
+    def _prefix_lookup(self, prompt) -> dict:
+        """Map a prompt (the admission's *effective* prompt — for a retry
+        replay that is prompt + carried tokens, whose pages the failed
+        attempt may have registered before dying, making the replay
+        nearly free) to its longest cached prefix, clamped to the
         engine's sharing granularity.  The share base is
 
           * a multiple of ``prefill_chunk`` — the sharer's own chunk
@@ -1143,9 +1353,9 @@ class ServingEngine:
 
         Returns the full pages to alias plus, when the base lands
         mid-page, the donor page to copy-on-write split."""
-        chain, boundary, blcp = self._prefix.lookup(req.prompt)
+        chain, boundary, blcp = self._prefix.lookup(prompt)
         ps, c = self.page_size, self.prefill_chunk
-        base = min(len(chain) * ps + blcp, len(req.prompt) - 1,
+        base = min(len(chain) * ps + blcp, len(prompt) - 1,
                    self.max_seq - c)
         base -= base % c
         n_full, cow = divmod(base, ps)
@@ -1167,18 +1377,19 @@ class ServingEngine:
         forever."""
         if self._prefix is None or not pending:
             return False
+        prompt = self._eff_prompt(req)
         ps, c = self.page_size, self.prefill_chunk
         for admit in pending.values():
-            donor = admit["req"].prompt
+            donor = admit["prompt"]
             lcp = 0
-            for a, b in zip(donor, req.prompt):
+            for a, b in zip(donor, prompt):
                 if int(a) != int(b):
                     break
                 lcp += 1
             # the donor will index floor(donor_plen / ps) full pages; apply
             # the same clamps _prefix_lookup would
             pot = min((lcp // ps) * ps, (len(donor) // ps) * ps,
-                      len(req.prompt) - 1, self.max_seq - c)
+                      len(prompt) - 1, self.max_seq - c)
             pot -= pot % c
             if pot >= ps and pot > have:
                 return True
@@ -1221,17 +1432,19 @@ class ServingEngine:
                                          self._pool.shared_pages)
         return cache
 
-    def _register_prefix(self, i: int, req: Request, plen: int) -> None:
+    def _register_prefix(self, i: int, prompt, plen: int) -> None:
         """Index the admitting slot's fully written prompt pages so later
         admissions can alias them.  Only pages entirely covered by the
-        prompt are indexed — partial tails are stale, and the exclusion is
-        what keeps decode appends and parked writes out of every indexed
-        page.  New nodes take one pool reference each: the cached prefix
-        outlives the slot."""
+        prompt (the admission's effective prompt — for a replay, prompt +
+        carried tokens, all fully written by its waves) are indexed —
+        partial tails are stale, and the exclusion is what keeps decode
+        appends and parked writes out of every indexed page.  New nodes
+        take one pool reference each: the cached prefix outlives the
+        slot."""
         m = plen // self.page_size
         if not m:
             return
-        new = self._prefix.insert(req.prompt, self._slot_pages[i][:m])
+        new = self._prefix.insert(prompt, self._slot_pages[i][:m])
         for node in new:
             self._pool.incref(node.page)
         # remember what this slot contributed so a later fault in the SAME
@@ -1292,28 +1505,35 @@ class ServingEngine:
 
     def _start_admission(self, slot_idx: int, req: Request,
                          base: int = 0) -> dict:
-        plen = len(req.prompt)  # <= max_seq, validated up front in run()
+        prompt = self._eff_prompt(req)  # prompt + carried for a replay
+        carried = self._carried(req)
+        plen = len(prompt)  # <= max_seq, validated up front in run()
+        req.attempts += 1
         if self._chunked:
             # chunked prefill covers [base, plen): the shared prefix
             # [0, base) is already in granted pages and is skipped
             n_chunks = -(-(plen - base) // self.prefill_chunk)
         else:
             n_chunks = 1
-        return {"slot": slot_idx, "req": req, "plen": plen, "next": 0,
+        return {"slot": slot_idx, "req": req, "prompt": prompt,
+                "carried": carried, "plen": plen, "next": 0,
                 "n_chunks": n_chunks, "base": base}
 
-    def _first_token(self, logits, req: Request) -> int:
+    def _first_token(self, logits, req: Request, emit_idx: int = 0) -> int:
         return int(np.asarray(self._sample_tokens(
             logits, jnp.asarray([req.seed], jnp.int32),
-            jnp.asarray([0], jnp.int32),
+            jnp.asarray([emit_idx], jnp.int32),
             jnp.asarray([req.temperature], jnp.float32)))[0])
 
     def _finish_admission(self, slots, admit, tok: int, t0: float):
         req, i = admit["req"], admit["slot"]
-        req.ttft_s = time.perf_counter() - t0
+        if req.ttft_s is None:  # a retry keeps its first attempt's TTFT
+            req.ttft_s = time.perf_counter() - t0
         s = slots[i]
         s.request = req
-        s.tokens = [tok]
+        # a replay's lane resumes mid-output: the carried tokens are
+        # already committed, the wave's sampled token is the next one
+        s.tokens = list(admit["carried"]) + [tok]
         s.cache_len = admit["plen"]
         s.last_token = tok
         self.stats["admissions"] += 1
@@ -1321,8 +1541,8 @@ class ServingEngine:
             # the prompt's full pages are now all written: make them
             # reusable (before any potential immediate retirement, so a
             # prefill-only request still seeds the cache)
-            self._register_prefix(i, req, admit["plen"])
-        # request finished at prefill (max_new == 1 or full cache)
+            self._register_prefix(i, admit["prompt"], admit["plen"])
+        # request finished at prefill (budget or cache exhausted)
         if len(s.tokens) >= req.max_new_tokens or s.cache_len >= self.max_seq:
             self._free_slot(slots, i)
 
@@ -1338,13 +1558,13 @@ class ServingEngine:
             i = next(iter(pending))  # one admission per wave
             admit = pending.pop(i)
             req, plen = admit["req"], admit["plen"]
-            toks = np.asarray(req.prompt, np.int32)[None]
+            toks = np.asarray(admit["prompt"], np.int32)[None]
             one_cache = transformer.init_cache(self.cfg, 1, plen,
                                                self.cache_dtype)
             logits, one_cache = self._prefill_full(
                 self.params, jnp.asarray(toks), one_cache,
                 jnp.asarray([plen], jnp.int32))
-            tok = self._first_token(logits, req)
+            tok = self._first_token(logits, req, len(admit["carried"]))
             cache = self._adopt(cache, one_cache, jnp.asarray(i, jnp.int32))
             if self._dev_active:
                 self._merge_admissions(
@@ -1363,6 +1583,7 @@ class ServingEngine:
         last = np.zeros((n,), np.int32)
         seeds = np.zeros((n,), np.int32)
         temps = np.zeros((n,), np.float32)
+        emit0 = np.zeros((n,), np.int32)
         completing = []
         for i in list(pending):
             admit = pending[i]
@@ -1387,13 +1608,14 @@ class ServingEngine:
                         pending, i, RequestStatus.FAILED,
                         f"KV page allocation failed during admission: {e}")
                     continue
-            seg = req.prompt[lo:lo + c]
+            seg = admit["prompt"][lo:lo + c]
             toks[i, :len(seg)] = seg
             offs[i] = lo
             mask[i] = True
             last[i] = max(0, min(plen - 1 - lo, c - 1))
             seeds[i] = req.seed
             temps[i] = req.temperature
+            emit0[i] = len(admit["carried"])  # replay: resume the emit index
             admit["next"] += 1
             if admit["next"] >= admit["n_chunks"]:
                 completing.append(i)
@@ -1402,7 +1624,7 @@ class ServingEngine:
         first, cache = self._prefill_chunks(
             self.params, jnp.asarray(toks), cache, self._bt_device(),
             jnp.asarray(offs), jnp.asarray(mask), jnp.asarray(last),
-            jnp.asarray(seeds), jnp.asarray(temps))
+            jnp.asarray(seeds), jnp.asarray(temps), jnp.asarray(emit0))
         if completing:
             if self._dev_active:
                 # activate the lanes on device BEFORE the host sync: the
@@ -1428,18 +1650,21 @@ class ServingEngine:
         upd = np.zeros((n,), bool)
         activate = np.zeros((n,), bool)
         clens = np.zeros((n,), np.int32)
+        emit0 = np.zeros((n,), np.int32)
         mnew = np.zeros((n,), np.int32)
         for i, admit in admits:
             req, plen = admit["req"], admit["plen"]
+            k = len(admit["carried"])  # replay resumes mid-output
             upd[i] = True
             clens[i] = plen
+            emit0[i] = k + 1
             mnew[i] = req.max_new_tokens
-            activate[i] = not (req.max_new_tokens <= 1
+            activate[i] = not (req.max_new_tokens <= k + 1
                                or plen >= self.max_seq)
         self._state = self._admit_lanes(
             self._state, first, jnp.asarray(upd), jnp.asarray(activate),
-            jnp.asarray(clens), jnp.asarray(mnew), jnp.asarray(temps),
-            jnp.asarray(seeds))
+            jnp.asarray(clens), jnp.asarray(emit0), jnp.asarray(mnew),
+            jnp.asarray(temps), jnp.asarray(seeds))
 
     # -- decode (fused multi-tick block) -----------------------------------
 
@@ -1550,7 +1775,7 @@ class ServingEngine:
         if self._dev_active:
             def dispatch():
                 if fi is not None:
-                    fi.on_dispatch()
+                    fi.on_dispatch(device=True)
                 # dispatch from the device-resident carry: no host array
                 # is built and nothing from the previous block is awaited
                 # — block N+1 enters the stream while block N may still
@@ -1560,7 +1785,8 @@ class ServingEngine:
                     nan_mask)
             self._state, blk, mask, bad, cache = with_retries(
                 dispatch, max_retries=self.dispatch_retries,
-                retry_on=(InjectedFault,), backoff_s=0.0)()
+                retry_on=(InjectedFault,),
+                backoff_s=self.dispatch_backoff_s, seed=self.seed)()
             self._inflight.append((blk, mask, bad))
             st["decode_wall_s"] += time.perf_counter() - t_blk
             # fetch one block behind: drain block N while block N+1 runs
@@ -1570,7 +1796,7 @@ class ServingEngine:
 
         def dispatch():
             if fi is not None:
-                fi.on_dispatch()
+                fi.on_dispatch(device=False)
             return self._decode_block(
                 self.params,
                 jnp.asarray([s.last_token for s in slots], jnp.int32),
@@ -1587,7 +1813,8 @@ class ServingEngine:
                 nan_mask)
         blk, mask, bad, cache = with_retries(
             dispatch, max_retries=self.dispatch_retries,
-            retry_on=(InjectedFault,), backoff_s=0.0)()
+            retry_on=(InjectedFault,),
+            backoff_s=self.dispatch_backoff_s, seed=self.seed)()
         self._process_block(slots, blk, mask, bad, gating=True)
         st["decode_wall_s"] += time.perf_counter() - t_blk
         return cache
@@ -1599,13 +1826,119 @@ class ServingEngine:
         every device-side transition is a pure function of the drained
         readbacks — and finish the run on the host-driven reference path.
         Surviving requests complete with correct (token-identical greedy)
-        outputs and status DEGRADED."""
+        outputs and status DEGRADED — unless ``repromote`` later promotes
+        the run back to device-resident scheduling (see ``_try_promote``),
+        after which completions are OK again."""
         self.stats["sched_fallbacks"] += 1
         self._drain_blocks(slots, depth=0)
         self._state = None
         self._degraded = True
         self._dev_active = False
         self._sched_epoch += 1  # the fallback is a scheduler event
+        # trips the device breaker (threshold 1): re-promotion waits out
+        # the probe cooldown, then goes through a half-open canary probe
+        self._dev_breaker.record_failure()
+
+    # -- mid-run re-promotion (degraded -> device-resident) ----------------
+
+    def _canary_probe(self) -> bool:
+        """Probe device health with a tiny dedicated dispatch through the
+        same seams a real fused block runs behind (the injector's dispatch
+        hook, the serving watchdog) — never the real block, whose donated
+        state/cache a failing probe would destroy.  True = device answered
+        within deadline."""
+        st = self.stats
+        st["canary_probes"] += 1
+        fi = self.fault_injector
+
+        def probe():
+            if fi is not None:
+                fi.on_dispatch(device=True)
+            return self._canary_jit(self._canary_arg)
+
+        wd = (Watchdog(self.block_deadline_s)
+              if self.block_deadline_s is not None else None)
+        try:
+            if wd is None:
+                jax.block_until_ready(probe())
+            else:
+                with wd:
+                    jax.block_until_ready(probe())
+                if wd.fired:
+                    st["watchdog_trips"] += 1
+                    return False
+        except InjectedFault:
+            return False
+        return True
+
+    def _try_promote(self, slots) -> None:
+        """Half-open trial of the device breaker: once the cooldown after
+        a degrade has passed, send one canary; on success promote the run
+        back to device-resident scheduling, on failure re-open the breaker
+        with a doubled cooldown (bounded probing under a persistent
+        fault)."""
+        br = self._dev_breaker
+        if not br.allow():
+            return
+        if self._canary_probe():
+            br.record_success()
+            self._promote(slots)
+        else:
+            br.record_failure()
+
+    def _promote(self, slots) -> None:
+        """Mid-run re-promotion: rebuild the resident scheduler pytree from
+        the host mirror (exact — the host path is authoritative while
+        degraded), re-upload the block table, and hand scheduling back to
+        the device.  Post-promotion completions are stamped OK again, and
+        the steady-state sync gauge restarts from zero so it measures the
+        CURRENT scheduling regime (0.0 once the device is back in charge),
+        not the host-driven interlude."""
+        st = self.stats
+        if self.paged:
+            # device-resident decode never allocates: top up every live
+            # lane to its full worst-case coverage before handing it back
+            # (its admission reservation still covers this; a no-op for
+            # lanes the host path already grew fully)
+            for i, s in enumerate(slots):
+                if not s.active:
+                    continue
+                upto = min(s.cache_len + (s.request.max_new_tokens
+                                          - len(s.tokens)), self.max_seq)
+                try:
+                    self._grow_pages(i, upto)
+                except InjectedFault as e:
+                    self._fault_retire(
+                        slots, i, RequestStatus.FAILED,
+                        f"KV page allocation failed at re-promotion: {e}")
+        reqs = [s.request for s in slots]
+        self._state = {
+            "last_token": jnp.asarray([s.last_token for s in slots],
+                                      jnp.int32),
+            "cache_len": jnp.asarray([s.cache_len for s in slots],
+                                     jnp.int32),
+            "emitted": jnp.asarray([len(s.tokens) for s in slots],
+                                   jnp.int32),
+            "active": jnp.asarray([s.active for s in slots], jnp.bool_),
+            "max_new": jnp.asarray([r.max_new_tokens if r else 0
+                                    for r in reqs], jnp.int32),
+            "temps": jnp.asarray([r.temperature if r else 0.0
+                                  for r in reqs], jnp.float32),
+            "seeds": jnp.asarray([r.seed if r else 0 for r in reqs],
+                                 jnp.int32),
+        }
+        if self.paged:
+            self._bt_dev = None  # full re-upload from the host mirror at
+            #                      the next dispatch (lazy, like run start)
+        self._dev_active = True
+        self._degraded = False
+        self._sched_epoch += 1  # promotion is a scheduler event
+        st["repromotions"] += 1
+        st["steady_state_blocks"] = 0
+        self._steady_syncs = 0
+        self._last_dispatch_epoch = None
+        if self.audit_on_retire:
+            self.audit()
 
     def _drain_blocks(self, slots, depth: int = 0) -> None:
         """Read back queued decode blocks down to ``depth`` still in
@@ -1788,7 +2121,13 @@ class ServingEngine:
                       "requests_cancelled": 0, "requests_degraded": 0,
                       "degraded_blocks": 0, "faults_injected": 0,
                       "watchdog_trips": 0, "sched_fallbacks": 0,
-                      "integrity_faults": 0}
+                      "integrity_faults": 0,
+                      # recovery gauges — always present, every mode
+                      "requests_retried": 0, "retries_total": 0,
+                      "retry_backoff_s": 0.0, "retries_denied_breaker": 0,
+                      "repromotions": 0, "canary_probes": 0,
+                      "breaker_state": "closed",
+                      "retry_breaker_state": "closed"}
         # sync-counter scaffolding: the scheduler epoch advances on every
         # host event that feeds the device scheduler (admission wave,
         # retirement); a decode block dispatched with the epoch unchanged
@@ -1805,6 +2144,21 @@ class ServingEngine:
         self._dev_active = bool(self.device_sched)
         self._degraded = False
         self._state = None
+        # recovery scaffolding: the retry-wait pool plus the two circuit
+        # breakers.  The device breaker trips on the FIRST degrade
+        # (threshold 1 — degrading is already the containment action) and
+        # its cooldown paces canary probes; the retry breaker trips when
+        # retryable failures cluster, converting retry storms into
+        # fail-fast terminal statuses.  Ticks advance once per scheduler
+        # beat (main-loop iteration), not wall time, so recovery pacing is
+        # deterministic under test.
+        self._retryq: List[dict] = []
+        self._dev_breaker = CircuitBreaker(
+            threshold=1, window=1, cooldown=self.probe_cooldown_blocks)
+        self._retry_breaker = CircuitBreaker(
+            threshold=self.retry_breaker_threshold,
+            window=self.retry_breaker_window,
+            cooldown=self.retry_breaker_cooldown)
         fi = self.fault_injector
         fi_events0 = len(fi.events) if fi is not None else 0
         if fi is not None:
@@ -1866,10 +2220,22 @@ class ServingEngine:
         deferred_head = None  # queue head already counted as deferred
         held_head = None      # queue head already counted as held
         while (queue or pending or any(s.active for s in slots)
-               or self._inflight):
+               or self._inflight or self._retryq):
             # cancellation + deadline sweep over every request pool, once
             # per block boundary (host-side only, no device sync)
             self._police(slots, pending, queue, t0)
+            # one breaker tick per scheduler beat (deterministic pacing)
+            self._dev_breaker.tick()
+            self._retry_breaker.tick()
+            # retry-wait requests whose backoff elapsed rejoin the queue
+            self._pump_retries(queue)
+            # degraded + repromote: once the device breaker's cooldown has
+            # passed, probe with a canary and promote back to
+            # device-resident scheduling if the device answers
+            if (self.device_sched and self.repromote and not self._dev_active
+                    and (queue or pending
+                         or any(s.active for s in slots))):
+                self._try_promote(slots)
             # wave-assign every free slot a queued request; all pending
             # admissions advance together, one chunk per wave dispatch.
             # mid-flight = an admission that starts while other lanes are
@@ -1894,7 +2260,8 @@ class ServingEngine:
                     grant = None
                     if self.paged:
                         if self._prefix is not None:
-                            grant = self._prefix_lookup(head)
+                            grant = self._prefix_lookup(
+                                self._eff_prompt(head))
                         if self._held_for_pending_prefix(
                                 head, pending,
                                 grant["base"] if grant else 0):
@@ -1993,18 +2360,34 @@ class ServingEngine:
             elif self._inflight:
                 # nothing left to dispatch: read back the trailing blocks
                 self._drain_blocks(slots, depth=0)
+            elif not queue and not pending and self._retryq:
+                # only retry-wait work remains: sleep toward the earliest
+                # backoff expiry instead of spinning the loop
+                wait = (min(e["not_before"] for e in self._retryq)
+                        - time.perf_counter())
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
         wall = time.perf_counter() - t0
         total = sum(len(r.output) for r in requests)
         ttfts = [r.ttft_s for r in requests if r.ttft_s is not None]
         st = self.stats
-        # authoritative status recount from the request objects themselves
-        # (the incremental counters above can only agree, but recounting
-        # makes the invariant structural: sum(status counters) == len(requests))
+        # authoritative, attempts-aware status recount from the request
+        # objects themselves (the incremental counters above can only
+        # agree, but recounting makes the invariant structural:
+        # sum(status counters) == len(requests)).  A re-queued request
+        # counts exactly once, under its FINAL status — the withdrawn
+        # attempts live in the retry gauges (requests_retried /
+        # retries_total / per-request attempts + retry_errors), never in
+        # the status counters.
         counts = {s: 0 for s in RequestStatus}
         for r in requests:
             counts[r.status] += 1
         for s_, key in _STATUS_COUNTERS.items():
             st[key] = counts[s_]
+        st["requests_retried"] = sum(1 for r in requests if r.retries)
+        st["retries_total"] = sum(r.retries for r in requests)
+        st["breaker_state"] = self._dev_breaker.state
+        st["retry_breaker_state"] = self._retry_breaker.state
         if fi is not None:
             st["faults_injected"] = len(fi.events) - fi_events0
         st.update({

@@ -76,6 +76,7 @@ class FaultInjector:
         self._hang_dispatches: Dict[int, float] = {}
         self._nan_lanes: Dict[int, Set[int]] = {}  # block -> {lane}
         self._corrupt_readbacks: Dict[int, Optional[int]] = {}  # n -> lane
+        self._wedge_device_from: Optional[int] = None
         self.count_warmup = count_warmup
         self.armed = True
         self.events: List[dict] = []  # faults that actually fired
@@ -102,6 +103,42 @@ class FaultInjector:
         self._hang_dispatches[int(nth)] = float(seconds)
         return self
 
+    # -- transient / self-clearing schedules --------------------------------
+    #
+    # Containment (PR 7) only needed faults that *fire*; recovery needs
+    # faults that fire and then *stop* — the retry / canary-probe /
+    # re-promotion layer is exactly the machinery that must notice the
+    # clearing.  Everything ordinal-addressed is already self-clearing once
+    # its ordinals are consumed; these helpers make the common transient
+    # shapes explicit.
+
+    def dispatch_outage(self, start: int, n: int = 1) -> "FaultInjector":
+        """Transient device outage: fail every dispatch ordinal in
+        ``[start, start + n)``, then recover.  With ``n`` > the engine's
+        dispatch retry budget the run degrades to the host path mid-outage;
+        canary probes consume dispatch ordinals too, so a probe issued
+        during the outage fails and the first probe after it succeeds —
+        which is what lets the engine re-promote."""
+        for k in range(int(n)):
+            self._fail_dispatches.add(int(start) + k)
+        return self
+
+    def hang_once(self, nth: int, seconds: float) -> "FaultInjector":
+        """Hang exactly one dispatch (ordinal ``nth``) and then recover —
+        the transient spelling of ``hang_dispatch`` (which already only
+        fires once; the alias documents intent in recovery schedules)."""
+        return self.hang_dispatch(nth, seconds)
+
+    def wedge_device(self, nth: int = 0) -> "FaultInjector":
+        """Persistently wedge the *device* scheduler: every device-path
+        dispatch (fused blocks under ``device_sched``, canary probes) from
+        ordinal ``nth`` on fails, while host-path dispatches still succeed.
+        Models a wedged device scheduler whose host fallback works — the
+        recovery layer must converge to stable host-driven service (breaker
+        open, exponentially rarer canary probes) instead of thrashing."""
+        self._wedge_device_from = int(nth)
+        return self
+
     def inject_nan(self, lane: int, block: int) -> "FaultInjector":
         """NaN lane ``lane``'s logits for every tick of decode block
         ``block`` (block ordinal counts dispatches, like ``fail_dispatch``)."""
@@ -119,12 +156,20 @@ class FaultInjector:
     @classmethod
     def random_schedule(cls, seed: int, *, slots: int, n_faults: int = 3,
                         max_block: int = 8, max_alloc: int = 12,
-                        kinds=("alloc", "nan", "corrupt",
-                               "dispatch")) -> "FaultInjector":
+                        kinds=("alloc", "nan", "corrupt", "dispatch"),
+                        transient: bool = False) -> "FaultInjector":
         """Seeded random fault schedule over the first ``max_block`` blocks
-        / ``max_alloc`` allocations — the property tests' generator."""
+        / ``max_alloc`` allocations — the property tests' generator.
+
+        With ``transient=True`` every generated fault is self-clearing
+        (single-ordinal alloc/NaN/corrupt faults plus bounded dispatch
+        outages of 1..4 consecutive ordinals), so a retry / re-promotion
+        layer is guaranteed to eventually see the fault clear — the
+        recovery property tests' generator."""
         rng = np.random.default_rng(seed)
         fi = cls()
+        if transient:
+            kinds = ("alloc", "nan", "corrupt", "outage")
         for _ in range(n_faults):
             kind = kinds[int(rng.integers(len(kinds)))]
             if kind == "alloc":
@@ -134,6 +179,9 @@ class FaultInjector:
                               int(rng.integers(max_block)))
             elif kind == "corrupt":
                 fi.corrupt_readback(int(rng.integers(max_block)))
+            elif kind == "outage":
+                fi.dispatch_outage(int(rng.integers(max_block)),
+                                   int(rng.integers(1, 5)))
             else:
                 fi.fail_dispatch(int(rng.integers(max_block)))
         return fi
@@ -165,9 +213,12 @@ class FaultInjector:
             self._fire("alloc", f"page allocation #{n}")
             raise InjectedFault("alloc", f"page allocation #{n} failed")
 
-    def on_dispatch(self) -> int:
-        """Called at the entry of each decode-block dispatch; returns the
-        block ordinal (which ``nan_mask`` keys on)."""
+    def on_dispatch(self, device: bool = True) -> int:
+        """Called at the entry of each decode-block dispatch (and each
+        canary probe); returns the block ordinal (which ``nan_mask`` keys
+        on).  ``device`` says which scheduling path issued the dispatch —
+        ordinal-addressed schedules fire on either path, the persistent
+        ``wedge_device`` schedule only on the device path."""
         n = self._dispatch_calls
         self._dispatch_calls += 1
         if not self.armed:
@@ -176,9 +227,12 @@ class FaultInjector:
             self._fire("hang", f"dispatch #{n} "
                        f"stalled {self._hang_dispatches[n]}s")
             time.sleep(self._hang_dispatches[n])
-        if n in self._fail_dispatches:
-            self._fire("dispatch", f"dispatch #{n}")
-            raise InjectedFault("dispatch", f"decode dispatch #{n} failed")
+        wedged = (self._wedge_device_from is not None and device
+                  and n >= self._wedge_device_from)
+        if wedged or n in self._fail_dispatches:
+            tag = " (device wedge)" if wedged else ""
+            self._fire("dispatch", f"dispatch #{n}{tag}")
+            raise InjectedFault("dispatch", f"decode dispatch #{n}{tag} failed")
         return n
 
     def nan_mask(self, block: int, slots: int) -> Optional[np.ndarray]:

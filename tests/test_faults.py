@@ -375,8 +375,10 @@ def test_wedged_dispatch_degrades_to_host_path(served_model, paged):
     base = [r.output.tolist() for r in ref_reqs]
 
     fi = FaultInjector().fail_dispatch(1, persistent=3)
+    # repromote=False: this test pins the PR 7 degrade-and-stay contract;
+    # mid-run re-promotion (the default) is covered in test_recovery.py
     eng = _engine(cfg, packed, ctx, dispatch_retries=2, fault_injector=fi,
-                  **kw)
+                  repromote=False, **kw)
     reqs = _reqs(prompts, max_new=10)
     eng.run(reqs)
     assert all(r.status == RequestStatus.DEGRADED for r in reqs)
@@ -403,7 +405,9 @@ def test_watchdog_trip_degrades_device_path(served_model):
     prompts = _prompts(cfg)
     fi = FaultInjector().hang_dispatch(1, seconds=0.8)
     fi.armed = False
-    eng = _engine(cfg, packed, ctx, fault_injector=fi)
+    # repromote=False pins the degrade-and-stay contract (and keeps the
+    # canary probe from also tripping the armed watchdog mid-recovery)
+    eng = _engine(cfg, packed, ctx, fault_injector=fi, repromote=False)
     warm = _reqs(prompts, max_new=10)
     eng.run(warm)  # compiles both paths cold, no deadline armed yet
     base = [r.output.tolist() for r in warm]
