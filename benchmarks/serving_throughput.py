@@ -45,6 +45,17 @@ count:
     ``retry_backoff_s`` / ``retries_denied_breaker`` / ``repromotions`` /
     ``canary_probes`` / ``breaker_state`` / ``retry_breaker_state``)
     appear on every row of every mode.
+  * ``*_arrival`` — with ``--arrival-trace``, an open-loop configuration
+    per slot count: requests are submitted to the RESIDENT engine at
+    seeded exponential inter-arrival gaps (``--arrival-gap-ms``) through
+    the ``submit()``/``step()`` surface instead of one batch ``run()``,
+    the paper's edge-deployment shape (the engine is already warm when a
+    request lands).  TTFT is measured from each request's arrival —
+    reported via the explicit ``ttft_from_arrival_*`` keys, which exist
+    on every row (batch rows measure from submit too; there arrival
+    coincides with run start).  With ``--inject-faults transient`` a
+    ``fused_chaos_arrival`` row replays the chaos schedule over the
+    trace (arrivals land mid-degrade) and asserts zero FAILED/TIMEOUT.
   * ``*_device`` — with ``--device-sched``, each of the above reruns with
     the device-resident scheduler: slot bookkeeping lives in device arrays
     threaded block-to-block and the host reads results one block behind,
@@ -98,8 +109,13 @@ from repro.serving import FaultInjector, Request, ServingEngine
 # 3 = recovery gauges (requests_retried / retries_total / retry_backoff_s /
 # retries_denied_breaker / repromotions / canary_probes / breaker_state /
 # retry_breaker_state on every row) + --inject-faults {static,transient,all}
-# vocabulary with self-healing *_chaos rows
-SCHEMA_VERSION = 3
+# vocabulary with self-healing *_chaos rows;
+# 4 = continuous serving: TTFT is measured from each request's ARRIVAL
+# (submit time) rather than run start, reported via the explicit
+# ttft_from_arrival_* keys + scheduler_beats / idle_sleeps on every row,
+# and --arrival-trace adds open-loop *_arrival rows (arrival_trace /
+# arrival_gap_ms) driven through the resident submit()/step() surface
+SCHEMA_VERSION = 4
 
 
 def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
@@ -126,10 +142,39 @@ def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
     return reqs
 
 
+def _drive_arrival_trace(eng, reqs, arrivals_s):
+    """Open-loop client over the resident engine: submit each request the
+    moment the wall clock passes its trace offset, stepping the scheduler
+    in between, sleeping through genuinely idle gaps (no arrivals due, no
+    work or only retry backoff).  Returns the total wall time."""
+    t0 = time.perf_counter()
+    idx = 0
+    while idx < len(reqs) or eng.has_work:
+        now = time.perf_counter() - t0
+        while idx < len(reqs) and arrivals_s[idx] <= now:
+            eng.submit(reqs[idx])
+            idx += 1
+        if not eng.has_work:
+            time.sleep(max(0.0, t0 + arrivals_s[idx]
+                           - time.perf_counter()))
+            continue
+        out = eng.step()
+        if out.idle_until is not None:
+            wake = out.idle_until
+            if idx < len(reqs):
+                wake = min(wake, t0 + arrivals_s[idx])
+            wait = wake - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+    eng.drain()
+    return time.perf_counter() - t0
+
+
 def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
             max_prompt, max_new, seed, mode, paged=False, page_size=16,
             kv_pages=None, shared_prefix_len=0, prefix_sharing=False,
-            device_sched=False, fault_injector=None, engine_kw=None):
+            device_sched=False, fault_injector=None, engine_kw=None,
+            arrival_gap_ms=None):
     rng = np.random.default_rng(seed)
     reqs = make_requests(rng, n_requests, cfg.vocab_size, max_prompt, max_new,
                          shared_prefix_len=shared_prefix_len)
@@ -152,9 +197,20 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
                      max_new_tokens=2) for _ in range(2)])
     if fault_injector is not None:
         fault_injector.armed = True
-    t0 = time.perf_counter()
-    eng.run(reqs)
-    wall = time.perf_counter() - t0
+    if arrival_gap_ms is None:
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        wall = time.perf_counter() - t0
+    else:
+        # open-loop arrival trace: seeded exponential inter-arrival gaps
+        # submitted through the resident submit()/step() surface (run()
+        # resets the window + per-run fault ordinals itself; here we do
+        # both explicitly since the client owns the loop)
+        eng.reset_stats()
+        if fault_injector is not None:
+            fault_injector.reset_run()
+        gaps = rng.exponential(arrival_gap_ms / 1e3, size=len(reqs))
+        wall = _drive_arrival_trace(eng, reqs, np.cumsum(gaps))
     s = eng.stats
     total = s["total_new_tokens"]
     util = (s["decode_tokens"] / (s["decode_steps"] * slots)
@@ -181,6 +237,19 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         "ttft_p50_ms": float(np.percentile(ttfts, 50)) * 1e3,
         "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
         "ttft_p95_ms": float(np.percentile(ttfts, 95)) * 1e3,
+        # continuous-serving gauges (schema 4).  TTFT is measured from
+        # each request's ARRIVAL (submit time) in every mode — under a
+        # batch run() arrival coincides with run start, under an arrival
+        # trace it includes only the request's own queueing — and the
+        # explicit *_from_arrival keys document that clock for tooling
+        # that must not guess from the mode name.
+        "arrival_trace": arrival_gap_ms is not None,
+        "arrival_gap_ms": arrival_gap_ms,
+        "ttft_from_arrival_mean_ms": float(np.mean(ttfts)) * 1e3,
+        "ttft_from_arrival_p50_ms": float(np.percentile(ttfts, 50)) * 1e3,
+        "ttft_from_arrival_p95_ms": float(np.percentile(ttfts, 95)) * 1e3,
+        "scheduler_beats": s["scheduler_beats"],
+        "idle_sleeps": s["idle_sleeps"],
         # host-sync accounting (the device-resident scheduler's headline
         # metric): gating readbacks per dispatched block, plus the count
         # restricted to steady-state intervals (no admission/retire between
@@ -301,6 +370,21 @@ def main():
                          "request must terminate OK/DEGRADED with at "
                          "least one retry, one canary probe and one "
                          "re-promotion.  'all': both.")
+    ap.add_argument("--arrival-trace", action="store_true",
+                    help="also run an open-loop arrival-trace configuration "
+                         "per slot count (mode fused_arrival): requests are "
+                         "submitted to the RESIDENT engine at seeded "
+                         "exponential inter-arrival gaps via submit()/step() "
+                         "instead of one batch run(), and TTFT is reported "
+                         "from each request's arrival.  With "
+                         "--inject-faults transient (or all) a "
+                         "fused_chaos_arrival row reruns the trace under "
+                         "the self-clearing fault schedule + the "
+                         "self-healing engine and asserts zero "
+                         "FAILED/TIMEOUT")
+    ap.add_argument("--arrival-gap-ms", type=float, default=25.0,
+                    help="arrival-trace mode: mean exponential inter-"
+                         "arrival gap in milliseconds")
     ap.add_argument("--device-sched", action="store_true",
                     help="also run each configuration with the device-"
                          "resident scheduler (slot bookkeeping threaded "
@@ -472,6 +556,40 @@ def main():
                 assert crow["repromotions"] >= 1, crow
                 assert crow["breaker_state"] == "closed", crow
                 configs.append(crow)
+        if args.arrival_trace:
+            trace_cfgs = [("fused_arrival", {})]
+            if args.inject_faults in ("transient", "all"):
+                # the batch chaos schedule, replayed over the open-loop
+                # trace: the outage degrades the run mid-trace, later
+                # arrivals land on the degraded engine, and recovery must
+                # still terminate every request OK/DEGRADED
+                trace_cfgs.append(("fused_chaos_arrival", dict(
+                    fault_injector=(FaultInjector()
+                                    .dispatch_outage(1, 3)
+                                    .inject_nan(lane=min(1, slots - 1),
+                                                block=5)
+                                    .corrupt_readback(6)),
+                    device_sched=True,
+                    engine_kw=dict(max_retries=3, retry_backoff_s=0.0,
+                                   probe_cooldown_blocks=1))))
+            for tmode, tkw in trace_cfgs:
+                trow = run_one(cfg, packed, slots=slots,
+                               decode_block=args.decode_block,
+                               prefill_chunk=args.prefill_chunk,
+                               mode=tmode,
+                               arrival_gap_ms=args.arrival_gap_ms,
+                               **tkw, **common)
+                assert trow["arrival_trace"], trow
+                assert trow["ttft_from_arrival_p95_ms"] >= 0.0, trow
+                if "chaos" in tmode:
+                    assert trow["requests_failed"] == 0, trow
+                    assert trow["requests_timed_out"] == 0, trow
+                    assert (trow["requests_completed"]
+                            + trow["requests_degraded"]
+                            ) == args.n_requests, (
+                        "chaos arrival trace did not self-heal every "
+                        "request")
+                configs.append(trow)
         for r in configs:
             rows.append(r)
             print(f"{r['mode']},{r['slots']},{r['tok_s']:.1f},"

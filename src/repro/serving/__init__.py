@@ -1,4 +1,4 @@
 from repro.serving.engine import (AuditError, Request,  # noqa: F401
-                                  RequestStatus, ServingEngine)
+                                  RequestStatus, ServingEngine, StepOutcome)
 from repro.serving.faultinject import (FaultInjector,  # noqa: F401
                                        InjectedFault)

@@ -126,6 +126,36 @@ Sharing invariants (load-bearing; the property tests in
     deferring.  Index-only pages are invisible to the gate: they are
     reclaimed on demand by LRU eviction when allocation runs dry.
 
+**Resident lifecycle** (``submit()`` / ``step()`` / ``drain()`` /
+``close()``): the engine is a long-lived object, not a batch function.
+``submit(request)`` may be called at ANY point in the serving lifecycle —
+mid-decode, mid-degrade, mid-retry-backoff — and runs the admission-time
+policy per arrival: validation (an unservable request is stamped REJECTED
+immediately), default seed assignment off the engine-lifetime arrival
+counter, and clock stamping (``deadline_s`` and TTFT measure from this
+moment, never from a window boundary).  ``step()`` advances exactly one
+scheduler beat::
+
+    police -> breaker ticks -> retry pump -> promote probe ->
+    admission wave -> fused decode block -> one-block-behind drain
+
+and returns a :class:`StepOutcome`; when retry backoff is the only
+remaining work it carries ``idle_until`` so the caller sleeps instead of
+polling.  ``drain()`` steps until every submitted request is terminal and
+finalizes the stats window; ``close()`` drains and refuses further
+submissions.  Batch ``run()`` is a thin wrapper — reset the stats window,
+submit all, drain — so batch and incremental submission execute the EXACT
+same scheduler loop with identical tokens, and every serving mode/test
+pins the resident path.  All serving state (lanes, pools, block tables,
+prefix cache, retry queue, both breakers, the arrival counter) lives for
+the ENGINE lifetime and persists across windows; ``stats`` is a per-window
+view (``reset_stats()`` opens a window) while ``lifetime`` accumulates
+across windows.  Per-token streaming: an optional ``on_token(request,
+token)`` callback fires at readback, in emit order, once per committed
+token — after the integrity guards (a poisoned block's discarded tokens
+never fire) and never re-firing a retry replay's carried tokens, so the
+streamed sequence always equals the request's final ``output``.
+
 Slot state machine — who owns what.  Each decode lane is mirrored twice:
 a device row in the resident ``SchedulerState`` pytree (``last_token``,
 ``cache_len``, ``emitted``, ``active``, ``max_new``, ``temps``, ``seeds``
@@ -137,8 +167,11 @@ without readback; the host copy trails it by at most one block and is the
 only place FREE/ACTIVE transitions are decided.  Bracketed steps are
 paged-mode only; ``{host}``/``{device}`` marks where each step runs:
 
-    QUEUED --validation fails {host}--> DONE(REJECTED)
-           [never touches a slot, a page, or the device]
+    ARRIVED --submit() {host}: seed assigned off the engine-lifetime
+           arrival counter, deadline/TTFT clocks stamped--> QUEUED
+    ARRIVED --validation fails at submit() {host}--> DONE(REJECTED)
+           [never enters the queue, never touches a slot, a page, or
+            the device]
     QUEUED --cancel()/deadline sweep {host}--> DONE(CANCELLED | TIMEOUT)
     FREE --[reserve worst-case pages {host};
             device_sched: pre-grant the full reservation {host}]--
@@ -220,19 +253,28 @@ Sampling is reproducible per request: each slot's PRNG key is
 ``fold_in(PRNGKey(request.seed), emitted_index)``, so a request's output
 depends only on its seed and its own logits — never on which slot or tick
 order the scheduler happened to pick.  ``request.seed`` defaults to a
-deterministic function of the engine seed and submission index.
+deterministic function of the engine seed and the engine-lifetime ARRIVAL
+counter (not the position within one ``run()``'s request list), so the
+same request stream split across any mix of ``submit()`` and ``run()``
+calls samples identically to a single batch.
 
 Recurrent kinds (SSM / xLSTM) cannot resume prefill chunk-to-chunk (their
 state integrates every token), so they fall back to PR 1's whole-prompt
 donor prefill + adopt — the fused decode block works for them unchanged.
 
-``engine.stats`` reports aggregate *and* decode-only throughput
-(``decode_tokens / decode_wall_s``), TTFT p50/p95, and admission /
-interleave counters; paged mode adds KV pool gauges (page size, pool size,
-pages-in-use peak, pool utilization, live-token peak, reservation peak,
-page-starved admission deferrals).  Robustness gauges are present in every
+``engine.stats`` is a per-WINDOW view (one ``run()``, or whatever span
+the caller delimits with ``reset_stats()``/``drain()``): aggregate *and*
+decode-only throughput (``decode_tokens / decode_wall_s``), TTFT p50/p95
+measured from each request's arrival, scheduler-beat and idle-sleep
+counts, and admission / interleave counters; paged mode adds KV pool
+gauges (page size, pool size, pages-in-use peak, pool utilization,
+live-token peak, reservation peak, page-starved admission deferrals).
+``engine.lifetime`` accumulates across windows (arrivals, windows, status
+counters, faults, retries, decode totals) and is never clobbered by a new
+``run()``.  Robustness gauges are present in every
 mode: one ``requests_*`` counter per terminal status (recounted from the
-request objects at run end, so counters and statuses can never disagree),
+window's request objects at finalize, so counters and statuses can never
+disagree),
 ``degraded_blocks`` / ``sched_fallbacks`` / ``watchdog_trips`` /
 ``integrity_faults`` / ``faults_injected``, and recovery gauges
 (``requests_retried`` / ``retries_total`` / ``retry_backoff_s`` /
@@ -301,6 +343,25 @@ _STATUS_COUNTERS = {
 }
 
 
+@dataclasses.dataclass
+class StepOutcome:
+    """What one scheduler beat (``ServingEngine.step``) accomplished.
+
+    ``worked`` is False only when the engine had nothing anywhere (every
+    pool empty) — the beat was a no-op.  ``remaining`` counts requests the
+    engine still owes a terminal status (queued + pending admission + live
+    lanes + retry-wait; the one-block-behind readback can make a lane look
+    live one block after it finished on device).  ``idle_until`` is a
+    ``time.perf_counter()`` timestamp: when set, no beat can make progress
+    before then (the only work left is retry-wait backoff) — callers
+    should sleep toward it instead of spinning ``step()``; ``None`` means
+    either more work is dispatchable right now or the engine is empty."""
+
+    worked: bool
+    remaining: int
+    idle_until: Optional[float] = None
+
+
 @dataclasses.dataclass(eq=False)  # identity eq: the prompt array makes
 class Request:                     # field-wise __eq__ ambiguous, and queue
     # membership (cancel/deadline removal) must match THIS object anyway
@@ -309,18 +370,22 @@ class Request:                     # field-wise __eq__ ambiguous, and queue
     temperature: float = 0.0           # 0 = greedy
     seed: Optional[int] = None         # sampling seed; engine assigns a
     #                                    deterministic default if None
-    deadline_s: Optional[float] = None  # wall-clock budget from run()
-    #                                     start; checked at block/wave
-    #                                     boundaries -> TIMEOUT.  A retried
-    #                                     attempt's budget restarts when the
-    #                                     retry is scheduled (per-attempt
-    #                                     deadline, or every retry of a
-    #                                     TIMEOUT would be stillborn)
+    deadline_s: Optional[float] = None  # wall-clock budget from submit()
+    #                                     (arrival), NOT from run() start —
+    #                                     a late arrival never burns budget
+    #                                     it was not yet queued for; checked
+    #                                     at block/wave boundaries ->
+    #                                     TIMEOUT.  A retried attempt's
+    #                                     budget restarts when the retry is
+    #                                     scheduled (per-attempt deadline,
+    #                                     or every retry of a TIMEOUT would
+    #                                     be stillborn)
     max_retries: Optional[int] = None  # per-request override of the
     #                                    engine-level retry budget
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    ttft_s: Optional[float] = None     # time to first token (incl. queueing)
+    ttft_s: Optional[float] = None     # time from submit() (arrival) to
+    #                                    first token, incl. queueing
     done: bool = False
     status: Optional[RequestStatus] = None
     error: Optional[str] = None        # human-readable cause for non-OK
@@ -581,7 +646,8 @@ class ServingEngine:
                  retry_breaker_cooldown: int = 8,
                  fault_injector: Optional[FaultInjector] = None,
                  audit_on_retire: bool = False,
-                 on_block: Optional[Callable] = None):
+                 on_block: Optional[Callable] = None,
+                 on_token: Optional[Callable] = None):
         self.cfg = cfg
         self.params = packed_params
         self.max_seq = max_seq
@@ -645,6 +711,13 @@ class ServingEngine:
         self.fault_injector = fault_injector
         self.audit_on_retire = bool(audit_on_retire)
         self.on_block = on_block
+        # streaming seam: on_token(request, token) fires host-side at the
+        # moment each token is read back (first token at admission
+        # completion, decode tokens at block readback — one block behind
+        # the device in device-resident mode).  Tokens arrive in emit
+        # order, once each; a retry's replayed (carried) tokens are NOT
+        # re-fired (the failed attempt already delivered them).
+        self.on_token = on_token
         # -- recovery layer -----------------------------------------------
         # max_retries budgets request re-queues after a FAILED (and, with
         # retry_timeouts, TIMEOUT) retirement: the re-queued attempt replays
@@ -893,6 +966,19 @@ class ServingEngine:
         # a wedged device fails the probe and a recovered one passes it.
         self._canary_jit = jax.jit(lambda x: (x * 2 + 1).sum())
         self._canary_arg = jnp.arange(8, dtype=jnp.int32)
+
+        # -- resident lifecycle --------------------------------------------
+        # Engine-LIFETIME counters: monotone across windows, never reset by
+        # run()/reset_stats().  Window (per-run) stats live in self.stats.
+        self.lifetime = {
+            "arrivals": 0, "windows": 0, "faults_injected": 0,
+            "admissions": 0, "decode_blocks": 0, "decode_tokens": 0,
+            "total_new_tokens": 0, "requests_retried": 0, "retries_total": 0,
+        }
+        self.lifetime.update({k: 0 for k in _STATUS_COUNTERS.values()})
+        self._closed = False
+        self._reset_engine_state()
+        self.reset_stats()
 
     def compiled_shapes(self) -> dict:
         """Live jit-cache entry counts (the O(1)-compile invariant; holds
@@ -1270,24 +1356,27 @@ class ServingEngine:
         live lanes keep their tokens so far.  Status CANCELLED."""
         req.cancelled = True
 
-    def _expired(self, req: Request, t0: float) -> bool:
+    def _expired(self, req: Request) -> bool:
         if req.deadline_s is None:
             return False
-        # retried attempts measure their budget from the moment the retry
-        # was scheduled (``_deadline_t0``), fresh requests from run() start
+        # every request measures its budget from its own ``_deadline_t0``:
+        # stamped at submit() (arrival) for a fresh request, restamped at
+        # ``not_before`` when a retry is scheduled.  Nothing is measured
+        # from run()/window start — a late arrival never burns budget it
+        # was not yet queued for.
         start = getattr(req, "_deadline_t0", None)
         if start is None:
-            start = t0
+            start = self._window_t0
         return time.perf_counter() - start > req.deadline_s
 
-    def _police(self, slots, pending: dict, queue, t0: float) -> None:
+    def _police(self, slots, pending: dict, queue) -> None:
         """Block-boundary sweep of the cancellation and deadline
         contracts over all four request pools (queued, retry-wait, pending
         admission, live lane).  Runs host-side only — no device sync; a
         live lane's force-deactivation is a scalar device update."""
         for r in list(queue):
             why = (RequestStatus.CANCELLED if r.cancelled else
-                   RequestStatus.TIMEOUT if self._expired(r, t0) else None)
+                   RequestStatus.TIMEOUT if self._expired(r) else None)
             if why is not None:
                 queue.remove(r)
                 r.output = np.asarray(self._carried(r), np.int32)
@@ -1315,7 +1404,7 @@ class ServingEngine:
             if r.cancelled:
                 self._abort_admission(pending, i, RequestStatus.CANCELLED,
                                       "cancelled during admission")
-            elif self._expired(r, t0):
+            elif self._expired(r):
                 self._abort_admission(
                     pending, i, RequestStatus.TIMEOUT,
                     f"deadline_s={r.deadline_s} expired during admission")
@@ -1326,7 +1415,7 @@ class ServingEngine:
             if r.cancelled:
                 self._fault_retire(slots, i, RequestStatus.CANCELLED,
                                    "cancelled mid-decode")
-            elif self._expired(r, t0):
+            elif self._expired(r):
                 self._fault_retire(
                     slots, i, RequestStatus.TIMEOUT,
                     f"deadline_s={r.deadline_s} expired mid-decode")
@@ -1525,10 +1614,14 @@ class ServingEngine:
             jnp.asarray([emit_idx], jnp.int32),
             jnp.asarray([req.temperature], jnp.float32)))[0])
 
-    def _finish_admission(self, slots, admit, tok: int, t0: float):
+    def _finish_admission(self, slots, admit, tok: int):
         req, i = admit["req"], admit["slot"]
         if req.ttft_s is None:  # a retry keeps its first attempt's TTFT
-            req.ttft_s = time.perf_counter() - t0
+            # measured from the request's ARRIVAL (submit time), not from
+            # run()/window start — the number a continuously arriving
+            # client actually observes
+            req.ttft_s = time.perf_counter() - getattr(
+                req, "_arrival_t", self._window_t0)
         s = slots[i]
         s.request = req
         # a replay's lane resumes mid-output: the carried tokens are
@@ -1536,6 +1629,10 @@ class ServingEngine:
         s.tokens = list(admit["carried"]) + [tok]
         s.cache_len = admit["plen"]
         s.last_token = tok
+        if self.on_token is not None:
+            # stream only the NEW token: a replay's carried tokens were
+            # already delivered by the attempt that emitted them
+            self.on_token(req, int(tok))
         self.stats["admissions"] += 1
         if self._prefix is not None:
             # the prompt's full pages are now all written: make them
@@ -1546,7 +1643,7 @@ class ServingEngine:
         if len(s.tokens) >= req.max_new_tokens or s.cache_len >= self.max_seq:
             self._free_slot(slots, i)
 
-    def _prefill_wave(self, cache, pending, slots, t0: float):
+    def _prefill_wave(self, cache, pending, slots):
         """Dispatch one admission wave: advance EVERY pending admission by
         one chunk in a single batched jit call (rows of lanes that are
         decoding or idle are masked).  In-flight lanes therefore stall for
@@ -1574,7 +1671,7 @@ class ServingEngine:
                                 for j in range(self.slots)], np.int32),
                     np.asarray([req.temperature if i == j else 0.0
                                 for j in range(self.slots)], np.float32))
-            self._finish_admission(slots, admit, tok, t0)
+            self._finish_admission(slots, admit, tok)
             return cache
         n, c = self.slots, self.prefill_chunk
         toks = np.zeros((n, c), np.int32)
@@ -1636,7 +1733,7 @@ class ServingEngine:
                     seeds, temps)
             ft = np.asarray(first)  # sync only when an admission completes
             for i in completing:
-                self._finish_admission(slots, pending.pop(i), int(ft[i]), t0)
+                self._finish_admission(slots, pending.pop(i), int(ft[i]))
         return cache
 
     def _merge_admissions(self, admits, first, seeds, temps) -> None:
@@ -2006,6 +2103,12 @@ class ServingEngine:
             live_after += s.cache_len
             if new:
                 s.last_token = int(new[-1])
+                if self.on_token is not None:
+                    # stream in emit order AFTER the integrity guards: a
+                    # poisoned block's tokens are discarded above, so a
+                    # streamed token is never withdrawn
+                    for t in new:
+                        self.on_token(s.request, int(t))
             if (len(s.tokens) >= s.request.max_new_tokens
                     or s.cache_len >= self.max_seq):
                 self._free_slot(slots, i)
@@ -2105,42 +2208,28 @@ class ServingEngine:
                 "shared_pages": pool.shared_pages,
                 "index_pages": n_index}
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        """Serve all requests: chunked admission interleaved with fused
-        decode blocks (token-level continuous batching)."""
-        t0 = time.perf_counter()
-        self.stats = {"admissions": 0, "mid_flight_admissions": 0,
-                      "prefill_chunks": 0, "decode_steps": 0,
-                      "decode_blocks": 0, "decode_tokens": 0,
-                      "decode_wall_s": 0.0,
-                      "max_chunks_between_decode_blocks": 0,
-                      "host_block_syncs": 0, "steady_state_blocks": 0,
-                      # robustness gauges — always present, every mode
-                      "requests_completed": 0, "requests_rejected": 0,
-                      "requests_failed": 0, "requests_timed_out": 0,
-                      "requests_cancelled": 0, "requests_degraded": 0,
-                      "degraded_blocks": 0, "faults_injected": 0,
-                      "watchdog_trips": 0, "sched_fallbacks": 0,
-                      "integrity_faults": 0,
-                      # recovery gauges — always present, every mode
-                      "requests_retried": 0, "retries_total": 0,
-                      "retry_backoff_s": 0.0, "retries_denied_breaker": 0,
-                      "repromotions": 0, "canary_probes": 0,
-                      "breaker_state": "closed",
-                      "retry_breaker_state": "closed"}
+    # -- resident lifecycle ------------------------------------------------
+
+    def _reset_engine_state(self) -> None:
+        """(Re)build the ENGINE-LIFETIME serving state: decode lanes, the
+        request pools (queue / pending admission / retry-wait), the KV
+        page pool + block tables + prefix index, the device scheduler
+        pytree, both circuit breakers, and the arrival counter.  Called
+        once from ``__init__``; calling it again abandons every in-flight
+        request and drops all cached prefixes — it is the hard-reset
+        escape hatch, NOT part of the normal submit/step/drain lifecycle
+        (``run()`` does not call it: pools, breakers and the prefix cache
+        deliberately persist across windows on a shared engine)."""
         # sync-counter scaffolding: the scheduler epoch advances on every
         # host event that feeds the device scheduler (admission wave,
         # retirement); a decode block dispatched with the epoch unchanged
         # since the previous dispatch ran in steady state
         self._sched_epoch = 0
-        self._last_dispatch_epoch = None
-        self._syncs_since_dispatch = 0
-        self._steady_syncs = 0
         self._inflight: deque = deque()  # dispatched, not yet read back
         # robustness scaffolding: _dev_active is the LIVE scheduler mode
-        # (flips False when the engine degrades mid-run; self.device_sched
-        # is the configured mode and never changes); _degraded stamps every
-        # later OK completion DEGRADED
+        # (flips False when the engine degrades; self.device_sched is the
+        # configured mode and never changes); _degraded stamps every later
+        # OK completion DEGRADED
         self._dev_active = bool(self.device_sched)
         self._degraded = False
         self._state = None
@@ -2150,8 +2239,11 @@ class ServingEngine:
         # its cooldown paces canary probes; the retry breaker trips when
         # retryable failures cluster, converting retry storms into
         # fail-fast terminal statuses.  Ticks advance once per scheduler
-        # beat (main-loop iteration), not wall time, so recovery pacing is
-        # deterministic under test.
+        # beat (step() with work), not wall time, so recovery pacing is
+        # deterministic under test.  Both breakers live for the ENGINE
+        # lifetime: a persistent fault's accumulated (doubled) probe
+        # cooldown is real evidence about the device and survives window
+        # boundaries instead of being forgotten at every run().
         self._retryq: List[dict] = []
         self._dev_breaker = CircuitBreaker(
             threshold=1, window=1, cooldown=self.probe_cooldown_blocks)
@@ -2159,32 +2251,9 @@ class ServingEngine:
             threshold=self.retry_breaker_threshold,
             window=self.retry_breaker_window,
             cooldown=self.retry_breaker_cooldown)
-        fi = self.fault_injector
-        fi_events0 = len(fi.events) if fi is not None else 0
-        if fi is not None:
-            fi.reset_run()
         if self.device_sched:
-            z = lambda dt: jnp.zeros((self.slots,), dt)
-            self._state = {"last_token": z(jnp.int32),
-                           "cache_len": z(jnp.int32),
-                           "emitted": z(jnp.int32),
-                           "active": z(jnp.bool_),
-                           "max_new": z(jnp.int32),
-                           "temps": z(jnp.float32),
-                           "seeds": z(jnp.int32)}
+            self._state = self._zero_sched_state()
         if self.paged:
-            self.stats.update({"kv_pages_peak": 0, "kv_live_tokens_peak": 0,
-                               "kv_reserved_pages_peak": 0,
-                               "admissions_deferred_pages": 0,
-                               # prefix-sharing gauges (always present in
-                               # paged mode; zero when sharing is off)
-                               "prefix_hits": 0,
-                               "prefill_tokens_skipped": 0,
-                               "kv_pages_shared": 0,
-                               "kv_pages_shared_peak": 0,
-                               "kv_cow_splits": 0,
-                               "prefix_evictions": 0,
-                               "admissions_held_for_prefix": 0})
             self._pool = _PagePool(self.kv_pages)
             self._prefix = (_PrefixIndex(self.page_size)
                             if self.enable_prefix_sharing else None)
@@ -2198,204 +2267,398 @@ class ServingEngine:
             self._slot_reserved = [0] * self.slots
             self._reserved_total = 0
         self._slot_reg_nodes: List[list] = [[] for _ in range(self.slots)]
-        for k, r in enumerate(requests):
-            # deterministic per-request default; normalize to int32 range.
-            # Validation happens at admission time (_validate/_reject): a
-            # bad request is reported on its own status instead of raising
-            # out of run() and abandoning every other lane.
-            r.seed = ((self.seed * 1000003 + k) if r.seed is None
-                      else int(r.seed)) % _SEED_MOD
-        queue = deque(requests)
-        slots = [_Slot() for _ in range(self.slots)]
+        self._lanes = [_Slot() for _ in range(self.slots)]
+        self._queue: deque = deque()  # submitted, waiting for a slot
+        self._pending: dict = {}      # slot index -> in-progress admission
+        self._cache = None            # KV cache; built at the first beat
+        self._arrivals = 0            # engine-lifetime monotonic counter:
+        #                               default seeds and batch/incremental
+        #                               token identity key on it
+        self._chunks_since_block = 0
+        self._deferred_head = None  # queue head already counted as deferred
+        self._held_head = None      # queue head already counted as held
+
+    def _zero_sched_state(self) -> dict:
+        z = lambda dt: jnp.zeros((self.slots,), dt)
+        return {"last_token": z(jnp.int32), "cache_len": z(jnp.int32),
+                "emitted": z(jnp.int32), "active": z(jnp.bool_),
+                "max_new": z(jnp.int32), "temps": z(jnp.float32),
+                "seeds": z(jnp.int32)}
+
+    def reset_stats(self) -> None:
+        """Open a fresh stats WINDOW: rebuild ``self.stats`` (every gauge
+        key present, every mode) and restart the window clock.  The
+        engine-lifetime counters in ``self.lifetime`` — and all serving
+        state: pools, prefix cache, breakers, in-flight work — are
+        untouched.  ``run()`` calls this at entry (each batch is its own
+        window); continuous callers may call it after a ``drain()`` to
+        delimit reporting windows.  Requests submitted before the reset
+        but not yet terminal leave the window's books — reset between
+        drains, not mid-flight."""
+        self.stats = {"admissions": 0, "mid_flight_admissions": 0,
+                      "prefill_chunks": 0, "decode_steps": 0,
+                      "decode_blocks": 0, "decode_tokens": 0,
+                      "decode_wall_s": 0.0,
+                      "max_chunks_between_decode_blocks": 0,
+                      "host_block_syncs": 0, "steady_state_blocks": 0,
+                      # beat accounting (the busy-spin regression guard: a
+                      # pure retry-backoff window costs ONE sleep, not a
+                      # capped-sleep poll loop)
+                      "scheduler_beats": 0, "idle_sleeps": 0,
+                      "idle_wait_s": 0.0,
+                      # robustness gauges — always present, every mode
+                      "requests_completed": 0, "requests_rejected": 0,
+                      "requests_failed": 0, "requests_timed_out": 0,
+                      "requests_cancelled": 0, "requests_degraded": 0,
+                      "degraded_blocks": 0, "faults_injected": 0,
+                      "watchdog_trips": 0, "sched_fallbacks": 0,
+                      "integrity_faults": 0,
+                      # recovery gauges — always present, every mode (the
+                      # breaker states report the persistent breakers)
+                      "requests_retried": 0, "retries_total": 0,
+                      "retry_backoff_s": 0.0, "retries_denied_breaker": 0,
+                      "repromotions": 0, "canary_probes": 0,
+                      "breaker_state": self._dev_breaker.state,
+                      "retry_breaker_state": self._retry_breaker.state}
         if self.paged:
-            cache = transformer.init_paged_cache(
+            self.stats.update({"kv_pages_peak": 0, "kv_live_tokens_peak": 0,
+                               "kv_reserved_pages_peak": 0,
+                               "admissions_deferred_pages": 0,
+                               # prefix-sharing gauges (always present in
+                               # paged mode; zero when sharing is off)
+                               "prefix_hits": 0,
+                               "prefill_tokens_skipped": 0,
+                               "kv_pages_shared": 0,
+                               "kv_pages_shared_peak": 0,
+                               "kv_cow_splits": 0,
+                               "prefix_evictions": 0,
+                               "admissions_held_for_prefix": 0})
+        # steady-state classification restarts per window: the first block
+        # of a window is never charged as steady
+        self._last_dispatch_epoch = None
+        self._syncs_since_dispatch = 0
+        self._steady_syncs = 0
+        self._window_requests: List[Request] = []
+        self._window_t0 = time.perf_counter()
+        self._window_contrib: Optional[dict] = None
+        fi = self.fault_injector
+        self._fi_events0 = len(fi.events) if fi is not None else 0
+
+    def _ensure_cache(self) -> None:
+        if self._cache is not None:
+            return
+        if self.paged:
+            self._cache = transformer.init_paged_cache(
                 self.cfg, self.kv_pages, self.page_size, self.cache_dtype,
                 kv_quant=self.kv_quant)
         else:
-            cache = transformer.init_cache(self.cfg, self.slots,
-                                           self.max_seq, self.cache_dtype,
-                                           kv_quant=self.kv_quant)
-        pending: dict = {}  # slot index -> in-progress admission
-        chunks_since_block = 0
-        deferred_head = None  # queue head already counted as deferred
-        held_head = None      # queue head already counted as held
-        while (queue or pending or any(s.active for s in slots)
-               or self._inflight or self._retryq):
-            # cancellation + deadline sweep over every request pool, once
-            # per block boundary (host-side only, no device sync)
-            self._police(slots, pending, queue, t0)
-            # one breaker tick per scheduler beat (deterministic pacing)
-            self._dev_breaker.tick()
-            self._retry_breaker.tick()
-            # retry-wait requests whose backoff elapsed rejoin the queue
-            self._pump_retries(queue)
-            # degraded + repromote: once the device breaker's cooldown has
-            # passed, probe with a canary and promote back to
-            # device-resident scheduling if the device answers
-            if (self.device_sched and self.repromote and not self._dev_active
-                    and (queue or pending
-                         or any(s.active for s in slots))):
-                self._try_promote(slots)
-            # wave-assign every free slot a queued request; all pending
-            # admissions advance together, one chunk per wave dispatch.
-            # mid-flight = an admission that starts while other lanes are
-            # live decoding.  Paged mode admits FIFO under worst-case page
-            # reservation (discounted by granted shared pages): the
-            # reservation sum plus legacy shared pages never exceeds the
-            # pool, so lazy page growth can't fail mid-flight.
-            for i, s in enumerate(slots):
+            self._cache = transformer.init_cache(
+                self.cfg, self.slots, self.max_seq, self.cache_dtype,
+                kv_quant=self.kv_quant)
+
+    def _restore_device_residency(self) -> None:
+        """Hand scheduling back to the device at a window boundary after a
+        degraded window: with the engine fully drained (no live lane,
+        nothing pending or in flight) a zeroed resident pytree is exact,
+        so no canary is needed — the documented "the next run() starts
+        device-resident regardless" contract.  The device breaker is NOT
+        reset: a persistent fault's accumulated cooldown keeps pacing any
+        mid-window re-promotion probes across windows."""
+        if not self.device_sched or self._dev_active:
+            return
+        if (self._pending or self._inflight
+                or any(s.active for s in self._lanes)):
+            return  # mid-flight: only the canary/promote path may restore
+        self._state = self._zero_sched_state()
+        self._dev_active = True
+        self._degraded = False
+        self._sched_epoch += 1
+
+    def submit(self, req: Request) -> Request:
+        """Enqueue one request on the RESIDENT engine — at any time, from
+        any point in the serving lifecycle (mid-decode, mid-degrade,
+        mid-retry-backoff).  Admission-time policy that used to run at
+        ``run()`` start runs HERE, per arrival:
+
+          * validation (``_validate``) — an unservable request is stamped
+            REJECTED immediately and never enters the queue;
+          * default seed assignment — keyed on the engine-lifetime arrival
+            counter, so the same request stream split across any number of
+            ``submit()`` calls samples identically to one batch ``run()``;
+          * clock stamping — the ``deadline_s`` budget and TTFT both
+            measure from THIS moment (arrival), never from a window start.
+
+        Returns the request (already terminal if it was rejected).
+        ``submit()`` dispatches nothing — the caller advances the engine
+        with ``step()``/``drain()``."""
+        if self._closed:
+            raise RuntimeError("submit() on a closed ServingEngine")
+        now = time.perf_counter()
+        # deterministic per-request default; normalize to int32 range
+        req.seed = ((self.seed * 1000003 + self._arrivals)
+                    if req.seed is None else int(req.seed)) % _SEED_MOD
+        self._arrivals += 1
+        self.lifetime["arrivals"] += 1
+        req._arrival_t = now
+        req._deadline_t0 = now
+        self._window_requests.append(req)
+        err = self._validate(req)
+        if err is not None:
+            self._reject(req, err)
+            return req
+        self._queue.append(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        """Whether any pool still owes progress: queued, pending
+        admission, live lane (the host view may lag one readback behind),
+        in-flight block, or retry-wait."""
+        return bool(self._queue or self._pending or self._inflight
+                    or self._retryq
+                    or any(s.active for s in self._lanes))
+
+    def step(self) -> StepOutcome:
+        """Advance the resident scheduler by exactly ONE beat:
+
+            police -> breaker ticks -> retry pump -> promote probe ->
+            admission wave -> fused decode block -> one-block-behind drain
+
+        (each stage runs only when it has work; an empty engine no-ops).
+        One beat dispatches at most one admission wave and one decode
+        block, so in-flight lanes never stall for more than one chunk +
+        one block no matter the arrival pattern.  Drive the engine by
+        looping ``step()`` — honoring ``StepOutcome.idle_until`` by
+        sleeping instead of re-calling immediately — or use
+        ``drain()``/``run()``, which do exactly that."""
+        slots, pending, queue = self._lanes, self._pending, self._queue
+        if not self.has_work:
+            return StepOutcome(worked=False, remaining=0)
+        self._ensure_cache()
+        self.stats["scheduler_beats"] += 1
+        # cancellation + deadline sweep over every request pool, once
+        # per block boundary (host-side only, no device sync)
+        self._police(slots, pending, queue)
+        # one breaker tick per scheduler beat (deterministic pacing)
+        self._dev_breaker.tick()
+        self._retry_breaker.tick()
+        # retry-wait requests whose backoff elapsed rejoin the queue
+        self._pump_retries(queue)
+        # degraded + repromote: once the device breaker's cooldown has
+        # passed, probe with a canary and promote back to
+        # device-resident scheduling if the device answers
+        if (self.device_sched and self.repromote and not self._dev_active
+                and (queue or pending
+                     or any(s.active for s in slots))):
+            self._try_promote(slots)
+        # wave-assign every free slot a queued request; all pending
+        # admissions advance together, one chunk per wave dispatch.
+        # mid-flight = an admission that starts while other lanes are
+        # live decoding.  Paged mode admits FIFO under worst-case page
+        # reservation (discounted by granted shared pages): the
+        # reservation sum plus legacy shared pages never exceeds the
+        # pool, so lazy page growth can't fail mid-flight.
+        for i, s in enumerate(slots):
+            if not queue:
+                break
+            if not s.active and i not in pending:
+                # pop invalid heads first: a rejection frees the head
+                # position for the next queued request immediately
+                # (submit() already validated fresh arrivals; this keeps
+                # the gate airtight for anything re-queued internally)
+                while queue:
+                    err = self._validate(queue[0])
+                    if err is None:
+                        break
+                    self._reject(queue.popleft(), err)
                 if not queue:
                     break
-                if not s.active and i not in pending:
-                    # pop invalid heads first: a rejection frees the head
-                    # position for the next queued request immediately
-                    while queue:
-                        err = self._validate(queue[0])
-                        if err is None:
-                            break
-                        self._reject(queue.popleft(), err)
-                    if not queue:
+                head = queue[0]
+                grant = None
+                if self.paged:
+                    if self._prefix is not None:
+                        grant = self._prefix_lookup(
+                            self._eff_prompt(head))
+                    if self._held_for_pending_prefix(
+                            head, pending,
+                            grant["base"] if grant else 0):
+                        # a pending admission is prefilling this head's
+                        # prefix right now: wait for it to register its
+                        # pages rather than prefill the prefix twice
+                        # (counted once per held head, like deferrals)
+                        if head is not self._held_head:
+                            self.stats["admissions_held_for_prefix"] += 1
+                            self._held_head = head
                         break
-                    head = queue[0]
-                    grant = None
-                    if self.paged:
-                        if self._prefix is not None:
-                            grant = self._prefix_lookup(
-                                self._eff_prompt(head))
-                        if self._held_for_pending_prefix(
-                                head, pending,
-                                grant["base"] if grant else 0):
-                            # a pending admission is prefilling this head's
-                            # prefix right now: wait for it to register its
-                            # pages rather than prefill the prefix twice
-                            # (counted once per held head, like deferrals)
-                            if head is not held_head:
-                                self.stats["admissions_held_for_prefix"] += 1
-                                held_head = head
-                            break
-                        worst = self.worst_case_pages(head)
-                        # reservation = pages this slot may ALLOCATE:
-                        # aliased prefix pages are discounted (they already
-                        # exist); the CoW boundary page is not (it is a
-                        # fresh allocation the reservation must cover)
-                        reserve = worst - (len(grant["pages"]) if grant
-                                           else 0)
-                        # granting converts index-only pages (evictable)
-                        # into slot-pinned ones — account for them like
-                        # legacy shared pages
-                        newly_pinned = (sum(
-                            1 for p in grant["pages"]
-                            if p not in self._page_slot_refs)
-                            if grant else 0)
-                        if (self._reserved_total + self._pinned_unreserved()
-                                + newly_pinned + reserve
-                                > self._pool.usable):
-                            # count deferral EPISODES (once per starved
-                            # queue head), not loop iterations spent waiting
-                            if head is not deferred_head:
-                                self.stats["admissions_deferred_pages"] += 1
-                                deferred_head = head
-                            break  # page-starved: retry after lanes retire
-                        self._slot_reserved[i] = reserve
-                        self._reserved_total += reserve
-                        self.stats["kv_reserved_pages_peak"] = max(
-                            self.stats["kv_reserved_pages_peak"],
-                            self._reserved_total)
-                        if grant is not None and grant["base"]:
-                            try:
-                                cache = self._grant_prefix(cache, i, grant)
-                            except InjectedFault as e:
-                                # CoW boundary allocation failed: the head
-                                # retires FAILED; aliased pages + the
-                                # reservation roll back refcount-exact
-                                self._reject_started_head(
-                                    queue, i,
-                                    "KV page allocation failed during "
-                                    f"prefix grant: {e}")
-                                continue
-                    pending[i] = self._start_admission(
-                        i, queue.popleft(),
-                        base=grant["base"] if grant else 0)
-                    if self.paged and self._dev_active:
-                        # pre-grant the lane's whole worst-case reservation
-                        # up front (the admission gate already reserved it,
-                        # so schedulability is unchanged) — decode then
-                        # never allocates, which is what lets block N+1
-                        # dispatch without consulting the host allocator
-                        req = pending[i]["req"]
+                    worst = self.worst_case_pages(head)
+                    # reservation = pages this slot may ALLOCATE:
+                    # aliased prefix pages are discounted (they already
+                    # exist); the CoW boundary page is not (it is a
+                    # fresh allocation the reservation must cover)
+                    reserve = worst - (len(grant["pages"]) if grant
+                                       else 0)
+                    # granting converts index-only pages (evictable)
+                    # into slot-pinned ones — account for them like
+                    # legacy shared pages
+                    newly_pinned = (sum(
+                        1 for p in grant["pages"]
+                        if p not in self._page_slot_refs)
+                        if grant else 0)
+                    if (self._reserved_total + self._pinned_unreserved()
+                            + newly_pinned + reserve
+                            > self._pool.usable):
+                        # count deferral EPISODES (once per starved
+                        # queue head), not loop iterations spent waiting
+                        if head is not self._deferred_head:
+                            self.stats["admissions_deferred_pages"] += 1
+                            self._deferred_head = head
+                        break  # page-starved: retry after lanes retire
+                    self._slot_reserved[i] = reserve
+                    self._reserved_total += reserve
+                    self.stats["kv_reserved_pages_peak"] = max(
+                        self.stats["kv_reserved_pages_peak"],
+                        self._reserved_total)
+                    if grant is not None and grant["base"]:
                         try:
-                            self._grow_pages(i, min(
-                                len(req.prompt) + req.max_new_tokens - 1,
-                                self.max_seq))
+                            self._cache = self._grant_prefix(
+                                self._cache, i, grant)
                         except InjectedFault as e:
-                            self._abort_admission(
-                                pending, i, RequestStatus.FAILED,
-                                "KV page allocation failed at admission "
-                                f"pre-grant: {e}")
+                            # CoW boundary allocation failed: the head
+                            # retires FAILED; aliased pages + the
+                            # reservation roll back refcount-exact
+                            self._reject_started_head(
+                                queue, i,
+                                "KV page allocation failed during "
+                                f"prefix grant: {e}")
                             continue
-                    if any(o.active for o in slots):
-                        self.stats["mid_flight_admissions"] += 1
-            # one batched prefill wave — in-flight lanes stall for at most
-            # this one dispatch before the next decode block runs
-            if pending:
-                others_active = any(s.active for s in slots)
-                cache = self._prefill_wave(cache, pending, slots, t0)
-                if others_active:
-                    chunks_since_block += 1
-                    self.stats["max_chunks_between_decode_blocks"] = max(
-                        self.stats["max_chunks_between_decode_blocks"],
-                        chunks_since_block)
-            # one fused decode block for every live lane.  Under the
-            # device-resident scheduler the host view can lag one block
-            # behind the device (a lane that finished on device still looks
-            # active here) — the extra dispatch ticks fully masked, and the
-            # drain inside _run_decode_block refreshes the view.
-            if any(s.active for s in slots):
-                cache = self._run_decode_block(cache, slots)
-                chunks_since_block = 0
-                if self.on_block is not None:
-                    # test/ops hook at the block boundary (e.g. issue a
-                    # cancel() deterministically at block k)
-                    self.on_block(self, self.stats["decode_blocks"])
-            elif self._inflight:
-                # nothing left to dispatch: read back the trailing blocks
-                self._drain_blocks(slots, depth=0)
-            elif not queue and not pending and self._retryq:
-                # only retry-wait work remains: sleep toward the earliest
-                # backoff expiry instead of spinning the loop
-                wait = (min(e["not_before"] for e in self._retryq)
-                        - time.perf_counter())
+                pending[i] = self._start_admission(
+                    i, queue.popleft(),
+                    base=grant["base"] if grant else 0)
+                if self.paged and self._dev_active:
+                    # pre-grant the lane's whole worst-case reservation
+                    # up front (the admission gate already reserved it,
+                    # so schedulability is unchanged) — decode then
+                    # never allocates, which is what lets block N+1
+                    # dispatch without consulting the host allocator
+                    req = pending[i]["req"]
+                    try:
+                        self._grow_pages(i, min(
+                            len(req.prompt) + req.max_new_tokens - 1,
+                            self.max_seq))
+                    except InjectedFault as e:
+                        self._abort_admission(
+                            pending, i, RequestStatus.FAILED,
+                            "KV page allocation failed at admission "
+                            f"pre-grant: {e}")
+                        continue
+                if any(o.active for o in slots):
+                    self.stats["mid_flight_admissions"] += 1
+        # one batched prefill wave — in-flight lanes stall for at most
+        # this one dispatch before the next decode block runs
+        if pending:
+            others_active = any(s.active for s in slots)
+            self._cache = self._prefill_wave(self._cache, pending, slots)
+            if others_active:
+                self._chunks_since_block += 1
+                self.stats["max_chunks_between_decode_blocks"] = max(
+                    self.stats["max_chunks_between_decode_blocks"],
+                    self._chunks_since_block)
+        # one fused decode block for every live lane.  Under the
+        # device-resident scheduler the host view can lag one block
+        # behind the device (a lane that finished on device still looks
+        # active here) — the extra dispatch ticks fully masked, and the
+        # drain inside _run_decode_block refreshes the view.
+        if any(s.active for s in slots):
+            self._cache = self._run_decode_block(self._cache, slots)
+            self._chunks_since_block = 0
+            if self.on_block is not None:
+                # test/ops hook at the block boundary (e.g. issue a
+                # cancel() deterministically at block k)
+                self.on_block(self, self.stats["decode_blocks"])
+        elif self._inflight:
+            # nothing left to dispatch: read back the trailing blocks
+            self._drain_blocks(slots, depth=0)
+        idle_until = None
+        if (self._retryq and not queue and not pending
+                and not self._inflight
+                and not any(s.active for s in slots)):
+            # the only work left is waiting out retry backoff: surface
+            # the earliest expiry so the caller SLEEPS toward it instead
+            # of spinning the beat loop (the batch-mode busy-spin bug)
+            idle_until = min(e["not_before"] for e in self._retryq)
+        remaining = (len(queue) + len(pending) + len(self._retryq)
+                     + sum(1 for s in slots if s.active))
+        return StepOutcome(worked=True, remaining=remaining,
+                           idle_until=idle_until)
+
+    def drain(self) -> dict:
+        """Step until every submitted request is terminal — sleeping (one
+        ``time.sleep`` per backoff window, counted in
+        ``stats["idle_sleeps"]``), never spinning — then finalize the
+        stats window.  Returns ``self.stats``.  Idempotent: draining an
+        idle engine just re-finalizes the current window."""
+        while self.has_work:
+            out = self.step()
+            if out.idle_until is not None:
+                wait = out.idle_until - time.perf_counter()
                 if wait > 0:
-                    time.sleep(min(wait, 0.05))
-        wall = time.perf_counter() - t0
-        total = sum(len(r.output) for r in requests)
+                    self.stats["idle_sleeps"] += 1
+                    self.stats["idle_wait_s"] += wait
+                    time.sleep(wait)
+        self._finalize_window()
+        return self.stats
+
+    def close(self) -> None:
+        """Finish all in-flight work and retire the engine: ``drain()``,
+        then refuse further ``submit()`` calls.  ``step()``/``drain()``
+        stay callable (and no-op) so shutdown races are harmless."""
+        self.drain()
+        self._closed = True
+
+    def _finalize_window(self) -> None:
+        """Close out the stats window over the requests submitted since
+        the last ``reset_stats()``: wall clock, throughput, TTFT
+        percentiles, the authoritative status recount, paged-pool gauges —
+        then fold the window's contribution into the engine-lifetime
+        counters (``self.lifetime``) exactly once (re-finalizing replaces
+        the previous contribution instead of double-counting), which is
+        what lets two consecutive ``run()``s on a shared engine account
+        faults and statuses additively instead of clobbering them."""
+        requests = self._window_requests
+        wall = time.perf_counter() - self._window_t0
+        total = sum(len(r.output) for r in requests if r.output is not None)
         ttfts = [r.ttft_s for r in requests if r.ttft_s is not None]
         st = self.stats
         # authoritative, attempts-aware status recount from the request
-        # objects themselves (the incremental counters above can only
-        # agree, but recounting makes the invariant structural:
-        # sum(status counters) == len(requests)).  A re-queued request
-        # counts exactly once, under its FINAL status — the withdrawn
-        # attempts live in the retry gauges (requests_retried /
-        # retries_total / per-request attempts + retry_errors), never in
-        # the status counters.
+        # objects themselves (the incremental counters can only agree,
+        # but recounting makes the invariant structural: sum(status
+        # counters) == len(window requests)).  A re-queued request counts
+        # exactly once, under its FINAL status — the withdrawn attempts
+        # live in the retry gauges (requests_retried / retries_total /
+        # per-request attempts + retry_errors), never in the status
+        # counters.
         counts = {s: 0 for s in RequestStatus}
         for r in requests:
-            counts[r.status] += 1
+            if r.status is not None:
+                counts[r.status] += 1
         for s_, key in _STATUS_COUNTERS.items():
             st[key] = counts[s_]
         st["requests_retried"] = sum(1 for r in requests if r.retries)
         st["retries_total"] = sum(r.retries for r in requests)
         st["breaker_state"] = self._dev_breaker.state
         st["retry_breaker_state"] = self._retry_breaker.state
+        fi = self.fault_injector
         if fi is not None:
-            st["faults_injected"] = len(fi.events) - fi_events0
+            st["faults_injected"] = max(0, len(fi.events) - self._fi_events0)
         st.update({
             "wall_s": wall,
             "total_new_tokens": total,
             "tokens_per_s": total / wall if wall > 0 else float("inf"),
             "decode_tok_s": (st["decode_tokens"] / st["decode_wall_s"]
                              if st["decode_wall_s"] > 0 else float("inf")),
+            # per-request TTFT, measured from each request's ARRIVAL
+            # (submit time) — under batch run() arrival coincides with the
+            # window start, so the batch semantics are unchanged
             "ttft_s": ttfts,
             "ttft_p50_s": (float(np.percentile(ttfts, 50)) if ttfts
                            else None),
@@ -2430,4 +2693,38 @@ class ServingEngine:
                 "prefix_hit_rate": (st["prefix_hits"] / st["admissions"]
                                     if st["admissions"] else 0.0),
             })
+        # engine-lifetime accounting: replace this window's previous
+        # contribution (if it was already finalized) with the fresh one
+        contrib = {"windows": 1, "total_new_tokens": total}
+        for key in _STATUS_COUNTERS.values():
+            contrib[key] = st[key]
+        for key in ("faults_injected", "admissions", "decode_blocks",
+                    "decode_tokens", "requests_retried", "retries_total"):
+            contrib[key] = st[key]
+        prev = self._window_contrib or {}
+        for k, v in contrib.items():
+            self.lifetime[k] += v - prev.get(k, 0)
+        self._window_contrib = contrib
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a batch: chunked admission interleaved with fused decode
+        blocks (token-level continuous batching).  A thin wrapper over the
+        resident lifecycle — reset the stats window, ``submit()`` every
+        request, ``drain()`` — so batch and incremental submission run the
+        EXACT same scheduler loop and produce identical tokens (default
+        seeds key on the engine-lifetime arrival counter, deadline/TTFT
+        clocks on per-request arrival).  Serving state (KV pool, prefix
+        cache, breakers, retry queue) persists across ``run()``s on a
+        shared engine; a window that ended degraded starts the next run
+        device-resident again (the device breaker keeps its cooldown)."""
+        self.reset_stats()
+        self._restore_device_residency()
+        fi = self.fault_injector
+        if fi is not None:
+            # per-run ordinal addressing (fail the Nth alloc of THIS run);
+            # fi.events persists, so lifetime fault accounting still sums
+            fi.reset_run()
+        for r in requests:
+            self.submit(r)
+        self.drain()
         return requests

@@ -1,0 +1,350 @@
+"""Continuous serving: the resident ``submit()``/``step()``/``drain()``
+engine surface (ISSUE 9), plus the batch-era bugs it flushed out.
+
+The load-bearing contracts:
+
+* **batch/incremental equivalence**: a staggered arrival trace driven
+  through ``submit()``/``step()`` is token-identical to one batch
+  ``run()`` of the same requests — across contiguous/paged x prefix
+  sharing x device_sched, including arrivals that land mid-degrade and
+  mid-retry-backoff (default seeds key on the engine-lifetime arrival
+  counter, not the position in a run's request list);
+* **streaming**: ``on_token(request, token)`` fires in emit order, once
+  per token, and the streamed sequence equals the final ``output`` for
+  every request — despite the one-block-behind drain and despite retry
+  replays re-prefilling already-delivered tokens;
+* **clocks**: ``deadline_s`` and TTFT measure from each request's
+  ``submit()`` (arrival), never from a window/run boundary, so a request
+  submitted into a long-lived engine cannot burn its budget while the
+  window clock is stale;
+* **no busy-spin**: a pure retry-backoff window costs one ``step()``
+  beat plus one sleep (``stats["idle_sleeps"]``), not a capped-sleep
+  poll loop;
+* **window vs lifetime stats**: ``run()`` opens a fresh stats window but
+  never clobbers ``engine.lifetime`` — two consecutive runs on a shared
+  engine account faults and statuses additively.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.models.layers import Ctx
+from repro.serving import (FaultInjector, Request, RequestStatus,
+                           ServingEngine, StepOutcome)
+
+_ENG_KW = dict(max_seq=32, batch_slots=2, prefill_chunk=4, decode_block=4)
+_PAGED_KW = dict(paged=True, page_size=4, kv_pages=24)
+
+MODES = {
+    "contig_host": dict(device_sched=False),
+    "contig_dev": dict(device_sched=True),
+    "paged_dev": dict(_PAGED_KW, device_sched=True),
+    "shared_host": dict(_PAGED_KW, enable_prefix_sharing=True,
+                        device_sched=False),
+    "shared_dev": dict(_PAGED_KW, enable_prefix_sharing=True,
+                       device_sched=True),
+}
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    packed = transformer.pack_params(cfg, params)
+    ctx = Ctx(mode="packed", group_size=cfg.group_size,
+              attn_q_chunk=128, attn_kv_chunk=128)
+    return cfg, packed, ctx
+
+
+def _engine(cfg, packed, ctx, **kw):
+    merged = dict(_ENG_KW)
+    merged.update(kw)
+    return ServingEngine(cfg, packed, ctx=ctx, **merged)
+
+
+def _prompts(cfg, seed=0, n=4):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size,
+                         size=int(rng.integers(3, 9))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _mk_reqs(cfg):
+    """Three greedy requests plus one temperature request with a DEFAULT
+    seed — the sampled one is what pins arrival-counter seed identity."""
+    prompts = _prompts(cfg)
+    reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts[:3]]
+    reqs.append(Request(prompt=prompts[3], max_new_tokens=6,
+                        temperature=0.9))
+    return reqs
+
+
+def _drive(eng, reqs, arrivals):
+    """Submit ``reqs[i]`` once ``arrivals[i]`` step() beats have run
+    (monotone non-decreasing), stepping the engine in between — the
+    open-loop client the batch path never exercises."""
+    beats, idx = 0, 0
+    while idx < len(reqs) or eng.has_work:
+        while idx < len(reqs) and arrivals[idx] <= beats:
+            eng.submit(reqs[idx])
+            idx += 1
+        out = eng.step()
+        beats += 1
+        if out.idle_until is not None and idx >= len(reqs):
+            wait = out.idle_until - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+        if not out.worked and idx < len(reqs):
+            beats = max(beats, arrivals[idx])  # idle gap: jump ahead
+    return eng.drain()
+
+
+# -- batch/incremental equivalence --------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_staggered_arrivals_match_batch(served_model, mode):
+    """ISSUE 9 acceptance: submit/step over a staggered arrival trace is
+    token-identical to batch run() in every engine mode, and the staggered
+    path keeps the device-resident zero-sync contract."""
+    cfg, packed, ctx = served_model
+    kw = MODES[mode]
+    batch = _engine(cfg, packed, ctx, **kw)
+    b_reqs = _mk_reqs(cfg)
+    batch.run(b_reqs)
+    assert all(r.status is RequestStatus.OK for r in b_reqs)
+
+    inc = _engine(cfg, packed, ctx, **kw)
+    i_reqs = _mk_reqs(cfg)
+    st = _drive(inc, i_reqs, arrivals=[0, 0, 2, 4])
+    for rb, ri in zip(b_reqs, i_reqs):
+        assert ri.status is RequestStatus.OK
+        assert ri.seed == rb.seed  # arrival counter == batch position
+        np.testing.assert_array_equal(ri.output, rb.output)
+        assert ri.ttft_s is not None and ri.ttft_s > 0
+    assert st["admissions"] == len(i_reqs)
+    if kw.get("device_sched"):
+        assert st["steady_state_syncs_per_block"] == 0.0
+
+
+def test_submit_mid_degrade(served_model):
+    """A request submitted AFTER the engine degraded to the host path is
+    served on that path, token-identical to a fault-free run."""
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg, n=3)
+    base = _engine(cfg, packed, ctx)
+    b_reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    base.run(b_reqs)
+
+    fi = FaultInjector().wedge_device(1)
+    eng = _engine(cfg, packed, ctx, fault_injector=fi, dispatch_retries=2,
+                  probe_cooldown_blocks=1)
+    reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    for _ in range(200):
+        eng.step()
+        if eng.stats["sched_fallbacks"]:
+            break
+    assert eng.stats["sched_fallbacks"] == 1
+    eng.submit(reqs[2])  # arrives mid-degrade
+    st = eng.drain()
+    assert all(r.status is RequestStatus.DEGRADED for r in reqs)
+    for rb, ri in zip(b_reqs, reqs):
+        np.testing.assert_array_equal(ri.output, rb.output)
+    assert st["repromotions"] == 0  # the wedge is persistent
+
+
+def test_submit_mid_retry_wait(served_model):
+    """A request submitted while the only other request is waiting out its
+    retry backoff is admitted into the idle slot immediately; the retried
+    request still replays token-identically."""
+    cfg, packed, ctx = served_model
+    prompts = _prompts(cfg, n=2)
+    base = _engine(cfg, packed, ctx, batch_slots=1)
+    b_reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    base.run(b_reqs)
+
+    fi = FaultInjector().inject_nan(lane=0, block=1)
+    eng = _engine(cfg, packed, ctx, batch_slots=1, fault_injector=fi,
+                  max_retries=1, retry_backoff_s=0.5)
+    reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    eng.submit(reqs[0])
+    for _ in range(200):
+        eng.step()
+        if eng._retryq:
+            break
+    assert eng._retryq and not any(s.active for s in eng._lanes)
+    eng.submit(reqs[1])  # arrives mid-backoff
+    st = eng.drain()
+    assert reqs[0].status is RequestStatus.OK and reqs[0].retries == 1
+    assert reqs[1].status is RequestStatus.OK and reqs[1].retries == 0
+    for rb, ri in zip(b_reqs, reqs):
+        np.testing.assert_array_equal(ri.output, rb.output)
+    assert st["retry_backoff_s"] > 0.0
+
+
+def test_temperature_identity_split_across_runs(served_model):
+    """The positional-seed bugfix: the same sampled request stream split
+    across two run() calls on one engine draws the same default seeds —
+    and therefore the same tokens — as a single batch run()."""
+    cfg, packed, ctx = served_model
+
+    def mk():
+        return [Request(prompt=np.asarray([2, 7, 1, 8], np.int32) * (i + 1)
+                        % cfg.vocab_size, max_new_tokens=6, temperature=0.9)
+                for i in range(4)]
+
+    whole = _engine(cfg, packed, ctx)
+    batch = mk()
+    whole.run(batch)
+
+    split = _engine(cfg, packed, ctx)
+    first, second = mk()[:2], mk()[2:]
+    split.run(first)
+    split.run(second)  # arrival counter continues at 2, like the batch
+    for rb, ri in zip(batch, first + second):
+        assert ri.seed == rb.seed
+        np.testing.assert_array_equal(ri.output, rb.output)
+
+
+# -- streaming ----------------------------------------------------------------
+
+
+def test_on_token_streams_in_emit_order_once(served_model):
+    """Every token is streamed exactly once, in emit order, and the
+    streamed sequence equals the final output — despite the one-block-
+    behind drain and a mid-flight admission."""
+    cfg, packed, ctx = served_model
+    streamed = {}
+    eng = _engine(cfg, packed, ctx,
+                  on_token=lambda r, t: streamed.setdefault(
+                      id(r), []).append(t))
+    reqs = _mk_reqs(cfg)
+    _drive(eng, reqs, arrivals=[0, 0, 3, 3])
+    for r in reqs:
+        assert r.status is RequestStatus.OK
+        assert streamed[id(r)] == r.output.tolist()
+
+
+def test_on_token_never_replays_carried_tokens(served_model):
+    """A retry re-prefills ``prompt + tokens so far``; the tokens already
+    delivered to the stream must NOT fire again, and a poisoned block's
+    discarded tokens must never have fired at all."""
+    cfg, packed, ctx = served_model
+    streamed = []
+    fi = FaultInjector().inject_nan(lane=0, block=2)
+    eng = _engine(cfg, packed, ctx, batch_slots=1, fault_injector=fi,
+                  max_retries=1, retry_backoff_s=0.0,
+                  on_token=lambda r, t: streamed.append(t))
+    req = Request(prompt=np.arange(1, 7, dtype=np.int32),
+                  max_new_tokens=16)
+    eng.run([req])
+    assert req.status is RequestStatus.OK and req.retries == 1
+    assert streamed == req.output.tolist()
+
+
+# -- clocks -------------------------------------------------------------------
+
+
+def test_deadline_measured_from_submit_not_window(served_model):
+    """A request submitted into a long-lived engine with a stale window
+    clock still gets its FULL deadline budget (the batch-era bug measured
+    it from run()/window start, expiring late arrivals on sight)."""
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx)
+    warm = [Request(prompt=p, max_new_tokens=4) for p in _prompts(cfg, n=2)]
+    eng.run(warm)  # seconds of jit compile leave the window clock stale
+    time.sleep(0.3)
+    req = eng.submit(Request(prompt=np.asarray([3, 1, 4, 1, 5], np.int32),
+                             max_new_tokens=4, deadline_s=1.0))
+    eng.drain()
+    assert req.status is RequestStatus.OK, req.error
+    assert len(req.output) == 4
+    assert req.ttft_s is not None and req.ttft_s < 1.0
+
+
+# -- no busy-spin in retry-backoff windows ------------------------------------
+
+
+def test_retry_backoff_sleeps_instead_of_spinning(served_model):
+    """During a pure backoff window (retry-wait is the only non-empty
+    pool) the engine sleeps ONCE toward the earliest ``not_before``
+    instead of polling: beat count stays proportional to dispatched work,
+    independent of the backoff duration."""
+    cfg, packed, ctx = served_model
+    fi = FaultInjector().inject_nan(lane=0, block=1)
+    eng = _engine(cfg, packed, ctx, batch_slots=1, fault_injector=fi,
+                  max_retries=1, retry_backoff_s=1.0)
+    req = Request(prompt=np.arange(1, 7, dtype=np.int32), max_new_tokens=8)
+    eng.run([req])
+    st = eng.stats
+    assert req.status is RequestStatus.OK and req.retries == 1
+    assert st["retry_backoff_s"] >= 0.5  # jitter floor of backoff 1.0
+    assert st["idle_sleeps"] == 1
+    assert st["idle_wait_s"] >= 0.25
+    # structural bound: every beat either dispatched something or was THE
+    # idle beat — a 0.05 s poll loop would add ~10-30 beats here
+    assert st["scheduler_beats"] <= (st["decode_blocks"]
+                                     + st["prefill_chunks"]
+                                     + st["idle_sleeps"] + 8)
+
+
+# -- window vs lifetime stats -------------------------------------------------
+
+
+def test_two_runs_account_faults_per_window_and_lifetime(served_model):
+    """run() opens a fresh stats window (per-window fault/retry counts)
+    but folds every window into ``engine.lifetime`` — nothing is
+    clobbered by the second run."""
+    cfg, packed, ctx = served_model
+    fi = FaultInjector().inject_nan(lane=0, block=1)
+    eng = _engine(cfg, packed, ctx, batch_slots=1, fault_injector=fi,
+                  max_retries=1, retry_backoff_s=0.0)
+    outs = []
+    for _ in range(2):
+        req = Request(prompt=np.arange(1, 7, dtype=np.int32),
+                      max_new_tokens=8)
+        eng.run([req])  # reset_run() re-arms the block-1 NaN each window
+        assert req.status is RequestStatus.OK and req.retries == 1
+        assert eng.stats["faults_injected"] == 1  # window-scoped
+        assert eng.stats["requests_retried"] == 1
+        assert eng.stats["requests_completed"] == 1
+        outs.append(req.output.tolist())
+    assert outs[0] == outs[1]
+    lt = eng.lifetime
+    assert lt["windows"] == 2
+    assert lt["arrivals"] == 2
+    assert lt["faults_injected"] == 2  # the first window's delta survived
+    assert lt["requests_retried"] == 2
+    assert lt["retries_total"] == 2
+    assert lt["requests_completed"] == 2
+    assert lt["total_new_tokens"] == sum(len(o) for o in outs)
+
+
+# -- lifecycle edges ----------------------------------------------------------
+
+
+def test_idle_step_and_close(served_model):
+    """step() on an empty engine is a no-op StepOutcome, drain() is
+    idempotent, and close() refuses further submissions."""
+    cfg, packed, ctx = served_model
+    eng = _engine(cfg, packed, ctx)
+    out = eng.step()
+    assert isinstance(out, StepOutcome)
+    assert not out.worked and out.remaining == 0 and out.idle_until is None
+    eng.drain()
+    eng.drain()  # re-finalizing an idle window is harmless
+    assert eng.lifetime["windows"] == 1  # counted once, not per drain
+    eng.close()
+    with pytest.raises(RuntimeError):
+        eng.submit(Request(prompt=np.asarray([1, 2], np.int32),
+                           max_new_tokens=2))
+    assert not eng.step().worked  # shutdown races stay harmless
