@@ -56,6 +56,19 @@ count:
     coincides with run start).  With ``--inject-faults transient`` a
     ``fused_chaos_arrival`` row replays the chaos schedule over the
     trace (arrivals land mid-degrade) and asserts zero FAILED/TIMEOUT.
+  * ``*_mesh`` — with ``--mesh DD,MM``, the fused (and paged) configuration
+    reruns on a (data=DD, model=MM) device mesh: the decode slot batch is
+    sharded over 'data' (each device owns slots/DD lanes of every fused
+    dispatch; non-divisible counts pad the slot axis and keep the
+    requested capacity) and flash-decode KV attention over 'model'
+    (canonical split-K partials + on-mesh partial-softmax combine, bitwise
+    vs single-device).  Every row carries the schema-5 multi-device gauges
+    (``mesh`` / ``shard_slots`` / ``shard_kv`` / ``kv_splits`` /
+    ``slots_per_device`` / ``requested_slots`` — null/identity on
+    single-device rows).  On this CPU host the devices come from
+    ``xla_force_host_platform_device_count`` so the rows measure the
+    sharded program's dispatch shape, not interconnect speed; token
+    streams are identical to the single-device rows by construction.
   * ``*_device`` — with ``--device-sched``, each of the above reruns with
     the device-resident scheduler: slot bookkeeping lives in device arrays
     threaded block-to-block and the host reads results one block behind,
@@ -94,11 +107,39 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+
+def _preparse_mesh(argv):
+    """``--mesh DD,MM`` needs ``--xla_force_host_platform_device_count``
+    set BEFORE jax initializes, so the mesh shape is pulled out of argv
+    ahead of the real argparse run (which still owns validation/help)."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--mesh="):
+            val = a.split("=", 1)[1]
+        else:
+            continue
+        dd, mm = (int(x) for x in val.split(","))
+        return dd, mm
+    return None
+
+
+_MESH_SHAPE = _preparse_mesh(sys.argv[1:])
+if _MESH_SHAPE is not None:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        _n = _MESH_SHAPE[0] * _MESH_SHAPE[1]
+        os.environ["XLA_FLAGS"] = (
+            _flags + f" --xla_force_host_platform_device_count={_n}").strip()
 
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs import get_config
 from repro.models import transformer
 from repro.serving import FaultInjector, Request, ServingEngine
@@ -114,8 +155,13 @@ from repro.serving import FaultInjector, Request, ServingEngine
 # (submit time) rather than run start, reported via the explicit
 # ttft_from_arrival_* keys + scheduler_beats / idle_sleeps on every row,
 # and --arrival-trace adds open-loop *_arrival rows (arrival_trace /
-# arrival_gap_ms) driven through the resident submit()/step() surface
-SCHEMA_VERSION = 4
+# arrival_gap_ms) driven through the resident submit()/step() surface;
+# 5 = multi-device serving: mesh / shard_slots / shard_kv / kv_splits /
+# slots_per_device / requested_slots on every row (mesh is null on
+# single-device rows) and --mesh DD,MM adds *_mesh rows where the slot
+# batch is sharded over 'data' and flash-decode KV over 'model' — token
+# streams stay identical to the single-device rows by construction
+SCHEMA_VERSION = 5
 
 
 def make_requests(rng, n, vocab, max_prompt, max_new, shared_prefix_len=0):
@@ -276,6 +322,14 @@ def run_one(cfg, packed, *, slots, decode_block, prefill_chunk, n_requests,
         # recovery gauges (schema 3) — budgeted retry with progress replay,
         # mid-run re-promotion, and the two circuit breakers; like the
         # robustness gauges they are present on every row unconditionally
+        # multi-device gauges (schema 5) — null/identity on single-device
+        # rows so tooling can assert on the keys unconditionally
+        "mesh": (list(eng.mesh_shape) if eng.mesh is not None else None),
+        "shard_slots": eng.shard_slots,
+        "shard_kv": eng.shard_kv,
+        "kv_splits": eng.kv_splits,
+        "slots_per_device": eng.slots_per_device,
+        "requested_slots": eng.requested_slots,
         "requests_retried": s["requests_retried"],
         "retries_total": s["retries_total"],
         "retry_backoff_s": s["retry_backoff_s"],
@@ -391,9 +445,36 @@ def main():
                          "through device arrays, one-block-behind host "
                          "readback; modes suffixed _device) and report the "
                          "per-block host-sync counts next to tok/s")
+    ap.add_argument("--mesh", type=str, default=None, metavar="DD,MM",
+                    help="also run each base configuration on a "
+                         "(data=DD, model=MM) device mesh (modes suffixed "
+                         "_mesh): the decode slot batch is sharded over "
+                         "'data' and flash-decode KV attention over 'model' "
+                         "(canonical split-K partials + on-mesh partial-"
+                         "softmax combine).  On CPU hosts the devices are "
+                         "forced via xla_force_host_platform_device_count "
+                         "(set before jax initializes by pre-parsing this "
+                         "flag), so the rows measure the sharded program's "
+                         "dispatch shape, not real interconnect speed.  "
+                         "Token streams are identical to the single-device "
+                         "rows by construction — the in-benchmark assert "
+                         "checks the per-device slot count and, with "
+                         "--device-sched, the zero-steady-state-sync "
+                         "contract under sharding")
     ap.add_argument("--json", type=str, default=None,
                     help="write results to this JSON file")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        dd, mm = (int(x) for x in args.mesh.split(","))
+        if dd < 1 or mm < 1:
+            ap.error("--mesh axes must be >= 1")
+        if dd * mm > jax.device_count():
+            ap.error(f"--mesh {dd},{mm} needs {dd * mm} devices, have "
+                     f"{jax.device_count()} (is XLA_FLAGS overriding "
+                     "the forced host device count?)")
+        mesh = compat.make_mesh((dd, mm), ("data", "model"))
 
     cfg = get_config("bitnet-0.73b").reduced(
         n_layers=2, d_model=128, n_heads=4, d_ff=256, vocab_size=256)
@@ -404,7 +485,7 @@ def main():
                   shared_prefix_len=args.shared_prefix_len)
 
     rows, speedup, paged_vs_fused, sharing_deltas = [], {}, {}, {}
-    device_vs_host = {}
+    device_vs_host, mesh_vs_single = {}, {}
     cols = ("mode,slots,tok_s,decode_tok_s,slot_util,mid_flight,"
             "ttft_p50_ms,ttft_p95_ms,decode_blocks,host_syncs_blk")
     print(cols)
@@ -487,6 +568,49 @@ def main():
                         shared["prefill_tokens_skipped"],
                     "prefix_hit_rate": shared["prefix_hit_rate"],
                 }
+        if mesh is not None:
+            # sharded reruns of the base configurations: slot batch over
+            # 'data', flash-decode KV over 'model'.  Tokens are identical
+            # to the single-device rows by construction (the split-K
+            # combine is bitwise and the scheduler semantics are those of
+            # the requested slot count), so the rows exist to measure the
+            # sharded dispatch shape and to pin the per-device slot count
+            # + steady-state sync contract in the emitted JSON.
+            mesh_kw = dict(mesh=mesh, shard_kv=mm > 1)
+            fused_mesh = run_one(cfg, packed, slots=slots,
+                                 decode_block=args.decode_block,
+                                 prefill_chunk=args.prefill_chunk,
+                                 mode="fused_mesh",
+                                 device_sched=args.device_sched,
+                                 engine_kw=mesh_kw, **common)
+            assert fused_mesh["mesh"] == [dd, mm], fused_mesh
+            assert fused_mesh["requested_slots"] == slots, fused_mesh
+            if dd > 1:
+                assert (fused_mesh["slots_per_device"] * dd
+                        == -(-slots // dd) * dd), fused_mesh
+            if args.device_sched:
+                assert (fused_mesh["steady_state_syncs_per_block"]
+                        == 0.0), fused_mesh
+            configs.append(fused_mesh)
+            base_cmp = fused_dev if args.device_sched else fused
+            mesh_vs_single[str(slots)] = {
+                "fused": fused_mesh["tok_s"] / base_cmp["tok_s"]}
+            if args.paged:
+                paged_mesh = run_one(cfg, packed, slots=slots,
+                                     decode_block=args.decode_block,
+                                     prefill_chunk=args.prefill_chunk,
+                                     mode="paged_mesh", paged=True,
+                                     page_size=args.page_size,
+                                     kv_pages=args.kv_pages,
+                                     prefix_sharing=bool(
+                                         args.shared_prefix_len),
+                                     device_sched=args.device_sched,
+                                     engine_kw=mesh_kw, **common)
+                assert paged_mesh["mesh"] == [dd, mm], paged_mesh
+                configs.append(paged_mesh)
+                pcmp = paged_dev if args.device_sched else paged
+                mesh_vs_single[str(slots)]["paged"] = (
+                    paged_mesh["tok_s"] / pcmp["tok_s"])
         if args.inject_faults in ("static", "all"):
             # deterministic schedule: an admission-time page-alloc fault, a
             # NaN lane mid-decode, and one corrupted readback.  Alloc
@@ -602,6 +726,12 @@ def main():
             pairs = ", ".join(f"{k} {v:.2f}x" for k, v in dv.items())
             print(f"# slots={slots}: device-resident scheduler tok/s vs "
                   f"host-driven: {pairs}")
+        if str(slots) in mesh_vs_single:
+            mv = mesh_vs_single[str(slots)]
+            pairs = ", ".join(f"{k} {v:.2f}x" for k, v in mv.items())
+            print(f"# slots={slots}: ({dd},{mm}) mesh tok/s vs matching "
+                  f"single-device row: {pairs} "
+                  f"({fused_mesh['slots_per_device']} slots/device)")
         if str(slots) in speedup:
             print(f"# slots={slots}: fused vs per-tick speedup "
                   f"{speedup[str(slots)]:.2f}x")
@@ -630,11 +760,13 @@ def main():
                      "interpret_kernels": jax.default_backend() != "tpu"},
             "workload": {**common, "decode_block": args.decode_block,
                          "prefill_chunk": args.prefill_chunk,
-                         "page_size": args.page_size if args.paged else None},
+                         "page_size": args.page_size if args.paged else None,
+                         "mesh": [dd, mm] if mesh is not None else None},
             "results": rows,
             "speedup_fused_vs_per_tick": speedup,
             "speedup_paged_vs_fused": paged_vs_fused,
             "speedup_device_vs_host_sched": device_vs_host,
+            "speedup_mesh_vs_single_device": mesh_vs_single,
             "prefix_sharing_deltas": sharing_deltas,
         }
         with open(args.json, "w") as f:

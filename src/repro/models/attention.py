@@ -420,17 +420,31 @@ def chunk_prefill_attention(q, k, v, offset, *, window=None, impl="xla"):
 
 def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
                          cache_len: jax.Array, *,
-                         window: Optional[int] = None) -> jax.Array:
+                         window: Optional[int] = None,
+                         kv_splits: int = 0,
+                         kv_axis: Optional[str] = None,
+                         kv_axis_size: int = 1) -> jax.Array:
     """Single-token attention vs cache. q: (b, h, 1, d); k/v: (b, kv_h, S, d).
 
     ``cache_len`` is a scalar (shared length) or a (b,) vector of per-request
     live lengths (ragged continuous batch).  Positions in [0, cache_len) are
     live; with a sliding window only the last ``window`` of those are
     attended (the paper's DA unit masking).  Padded/stale cache positions at
-    or beyond a request's length are never attended.  The sequence dim may be
-    sharded — max/sum reductions become collectives under SPMD
-    (flash-decoding over the mesh).
+    or beyond a request's length are never attended.
+
+    ``kv_splits=K`` switches to flash-decoding: the sequence is cut into K
+    chunks whose partial-softmax pieces are combined by the canonical merge
+    from ``kernels.decode_attention.ops`` — bitwise invariant to chunk
+    distribution.  With ``kv_axis`` set (inside a ``shard_map`` body over a
+    mesh whose ``kv_axis`` has ``kv_axis_size`` devices; KV storage
+    replicated along it) each device computes its own contiguous run of
+    K / size chunks and the partials are ``all_gather``'d in chunk order, so
+    the mesh result is bit-for-bit the single-device ``kv_splits=K`` result.
     """
+    if kv_splits and kv_splits >= 1:
+        return _decode_attention_splitk_xla(
+            q, k, v, cache_len, window=window, kv_splits=int(kv_splits),
+            kv_axis=kv_axis, kv_axis_size=int(kv_axis_size))
     b, h, _, d = q.shape
     kv_h, S = k.shape[1], k.shape[2]
     gsz = h // kv_h
@@ -455,7 +469,49 @@ def decode_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, h, 1, d).astype(q.dtype)
 
 
-def decode_attention(q, k, v, cache_len, *, window=None, impl="xla"):
+def _decode_attention_splitk_xla(q, k, v, cache_len, *, window,
+                                 kv_splits, kv_axis, kv_axis_size):
+    """Flash-decoding body shared by the single-device and mesh paths (see
+    ``decode_attention_xla``).  The per-chunk partials and the merge live in
+    ``kernels.decode_attention.ops`` so the serving engine, the standalone
+    splitk kernel, and the mesh wrapper all run the identical math."""
+    from repro.kernels.decode_attention import ops as da_ops
+    S = k.shape[2]
+    K = kv_splits
+    chunk = -(-S // K)
+    pad = K * chunk - S
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    if kv_axis is not None and kv_axis_size > 1:
+        da_ops.validate_num_splits(K, kv_axis_size, axis_name=str(kv_axis))
+        n_local = K // kv_axis_size
+        i = jax.lax.axis_index(kv_axis)
+        k = jax.lax.dynamic_slice_in_dim(
+            k, i * (n_local * chunk), n_local * chunk, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(
+            v, i * (n_local * chunk), n_local * chunk, axis=2)
+        m, l, acc = da_ops.splitk_partials(
+            q, k, v, cache_len, n_splits=n_local, chunk=chunk,
+            split0=i * n_local, window=window)
+        m = jax.lax.all_gather(m, kv_axis, axis=2, tiled=True)
+        l = jax.lax.all_gather(l, kv_axis, axis=2, tiled=True)
+        acc = jax.lax.all_gather(acc, kv_axis, axis=2, tiled=True)
+    else:
+        m, l, acc = da_ops.splitk_partials(
+            q, k, v, cache_len, n_splits=K, chunk=chunk, window=window)
+    return da_ops.splitk_combine(m, l, acc, q.dtype)
+
+
+def decode_attention(q, k, v, cache_len, *, window=None, impl="xla",
+                     kv_splits=0, kv_axis=None, kv_axis_size=1):
+    if kv_splits:
+        # the canonical chunked formulation is the only one with the
+        # cross-shard bitwise contract — it overrides impl="pallas"
+        return decode_attention_xla(q, k, v, cache_len, window=window,
+                                    kv_splits=kv_splits, kv_axis=kv_axis,
+                                    kv_axis_size=kv_axis_size)
     if impl == "pallas" and window is None:
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention(q, k, v, cache_len)
@@ -600,26 +656,32 @@ def gather_kv_pages_dequant(pool: jax.Array, scale_pool: jax.Array,
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len, *,
-                           window=None, impl="xla"):
+                           window=None, impl="xla", kv_splits=0,
+                           kv_axis=None, kv_axis_size=1):
     """Single-token attention against the paged cache.
 
     q: (b, h, 1, d); pools: (num_pages, page_size, kv_h, d); block_table:
     (b, n_pages); cache_len as in ``decode_attention``.  The Pallas path
     scalar-prefetches the block table and streams only owned pages; the XLA
     path gathers the slot's pages into contiguous rows and reuses
-    ``decode_attention_xla`` (also the sliding-window fallback)."""
-    if impl == "pallas" and window is None:
+    ``decode_attention_xla`` (also the sliding-window and flash-decoding
+    ``kv_splits`` fallback — the gather funnels the paged cache into the
+    same chunked formulation the contiguous path shards)."""
+    if impl == "pallas" and window is None and not kv_splits:
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention_paged(q, k_pool, v_pool, block_table,
                                              cache_len)
     k = gather_kv_pages(k_pool, block_table).astype(q.dtype)
     v = gather_kv_pages(v_pool, block_table).astype(q.dtype)
-    return decode_attention_xla(q, k, v, cache_len, window=window)
+    return decode_attention_xla(q, k, v, cache_len, window=window,
+                                kv_splits=kv_splits, kv_axis=kv_axis,
+                                kv_axis_size=kv_axis_size)
 
 
 def paged_decode_attention_quant(q, k_pool, v_pool, k_scale_pool,
                                  v_scale_pool, block_table, cache_len, *,
-                                 window=None, impl="xla"):
+                                 window=None, impl="xla", kv_splits=0,
+                                 kv_axis=None, kv_axis_size=1):
     """Single-token attention against the int8 paged cache.
 
     Pools are int8 with per-(token, head) scale planes (see
@@ -628,7 +690,7 @@ def paged_decode_attention_quant(q, k_pool, v_pool, k_scale_pool,
     is token-identical to a contiguous-KV8 one.  The Pallas path streams
     int8 pages + scales through the block table and fuses the dequant into
     the online-softmax loop (the int8 HBM read is the bandwidth win)."""
-    if impl == "pallas" and window is None:
+    if impl == "pallas" and window is None and not kv_splits:
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention_paged_quant(
             q, k_pool, v_pool, k_scale_pool, v_scale_pool, block_table,
@@ -637,7 +699,9 @@ def paged_decode_attention_quant(q, k_pool, v_pool, k_scale_pool,
                                 jnp.bfloat16)
     v = gather_kv_pages_dequant(v_pool, v_scale_pool, block_table,
                                 jnp.bfloat16)
-    return decode_attention_xla(q, k, v, cache_len, window=window)
+    return decode_attention_xla(q, k, v, cache_len, window=window,
+                                kv_splits=kv_splits, kv_axis=kv_axis,
+                                kv_axis_size=kv_axis_size)
 
 
 def paged_chunk_prefill_attention_xla(q, k_pool, v_pool, block_table, offset,

@@ -28,6 +28,16 @@ class Ctx:
     attn_kv_chunk: int = 512
     moe_token_chunk: int = 0  # scan MoE dispatch over token chunks (0 = off)
     kv_quant: bool = False    # int8 KV cache (beyond-paper: W1.58A8+KV8)
+    # flash-decoding over the KV sequence: 0 = off; K >= 1 routes decode
+    # attention through the canonical K-chunk partial-softmax formulation
+    # (kernels.decode_attention.ops.splitk_partials/combine) whose result
+    # is bitwise invariant to how the chunks are distributed.  With
+    # kv_shard_axis set (a mesh axis name, used inside shard_map) each of
+    # the axis's ``kv_shard_size`` devices computes K / size chunks and the
+    # partials are all_gather'd in chunk order before the shared combine.
+    kv_splits: int = 0
+    kv_shard_axis: object = None   # mesh axis name (str) or None
+    kv_shard_size: int = 1         # static size of kv_shard_axis
     remat_policy: str = "nothing"  # nothing | dots (save matmul outputs)
     qat_int8_fwd: bool = False  # run QAT forward on the int8 MXU path
     act_dtype: str = "float32"

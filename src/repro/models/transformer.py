@@ -425,7 +425,9 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
                 o = attention.paged_decode_attention_quant(
                     q.transpose(0, 2, 1, 3), kc_r, vc_r, ks_r, vs_r,
                     page_table, cache_len + 1, window=cfg.swa_window,
-                    impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+                    impl="pallas" if ctx.attn_impl == "pallas" else "xla",
+                    kv_splits=ctx.kv_splits, kv_axis=ctx.kv_shard_axis,
+                    kv_axis_size=ctx.kv_shard_size)
                 o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
                 return layers.linear_apply(p["o"], o, ctx), new_cache
             kc, vc = attention.paged_update_kv_cache(
@@ -435,7 +437,9 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             o = attention.paged_decode_attention(
                 q.transpose(0, 2, 1, 3), k_read, v_read, page_table,
                 cache_len + 1, window=cfg.swa_window,
-                impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+                impl="pallas" if ctx.attn_impl == "pallas" else "xla",
+                kv_splits=ctx.kv_splits, kv_axis=ctx.kv_shard_axis,
+                kv_axis_size=ctx.kv_shard_size)
             o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
             return layers.linear_apply(p["o"], o, ctx), new_cache
         if quantized:
@@ -468,7 +472,9 @@ def _attn_apply(cfg: ModelConfig, ctx: Ctx, p: dict, x: jax.Array,
             q.transpose(0, 2, 1, 3), k_read.transpose(0, 2, 1, 3),
             v_read.transpose(0, 2, 1, 3), cache_len + 1,
             window=cfg.swa_window,
-            impl="pallas" if ctx.attn_impl == "pallas" else "xla")
+            impl="pallas" if ctx.attn_impl == "pallas" else "xla",
+            kv_splits=ctx.kv_splits, kv_axis=ctx.kv_shard_axis,
+            kv_axis_size=ctx.kv_shard_size)
     o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
     return layers.linear_apply(p["o"], o, ctx), new_cache
 

@@ -196,6 +196,60 @@ def all_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
 
 
+# ---------------------------------------------------------------------------
+# Serving-engine state sharding (multi-device ServingEngine)
+# ---------------------------------------------------------------------------
+
+def serving_slot_axis(mesh: Mesh, slots: int, *,
+                      shard_slots: bool = True) -> Optional[str]:
+    """Mesh axis carrying the decode slot batch: 'data' when slot sharding
+    is requested and divides the slot count, else None (replicated — every
+    device redundantly computes all slots, still correct)."""
+    if not shard_slots or "data" not in mesh.axis_names:
+        return None
+    return _fit(mesh, slots, "data")
+
+
+def serving_specs(mesh: Mesh, *, slots: int, paged: bool, kv_quant: bool,
+                  shard_slots: bool = True) -> dict:
+    """PartitionSpecs for every device structure the ServingEngine threads
+    block-to-block.  All scheduler-pytree leaves are (slots,), the block
+    table is (slots, pages_per_slot), decode-block outputs are
+    (slots, block).
+
+    Contiguous caches (L, slots, S, kv_h, hd) genuinely shard their slot
+    row axis.  Paged pools are *replicated-but-divergent*: each data-shard
+    device only ever writes pages owned by its own slots and the pools are
+    never read back to the host, so the replication claim (P()) is a layout
+    statement, not a value statement — every shard_map over them must run
+    with the replication check disabled (``check_vma=False``).
+    """
+    sa = serving_slot_axis(mesh, slots, shard_slots=shard_slots)
+    if paged:
+        cache = {"k": P(), "v": P()}
+        if kv_quant:
+            cache.update(k_scale=P(), v_scale=P())
+        bt = P(sa, None)
+    else:
+        cache = {"k": P(None, sa, None, None, None),
+                 "v": P(None, sa, None, None, None)}
+        if kv_quant:
+            cache.update(k_scale=P(None, sa, None, None),
+                         v_scale=P(None, sa, None, None))
+        # contiguous engines thread a (1, 1) placeholder block table
+        bt = P(None, None)
+    return dict(slot_ax=sa, state=P(sa), bt=bt, cache=cache,
+                tokens=P(sa, None), blk=P(sa, None))
+
+
+def serving_shardings(mesh: Mesh, specs) -> dict:
+    """Map a ``serving_specs`` tree of PartitionSpecs to NamedShardings
+    (device_put targets for state/block-table/cache uploads)."""
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p) if isinstance(p, P) else p, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
 def make_constrain(mesh: Mesh, cfg, global_batch: int, layout: str = "2d"):
     """Ctx.constrain hook: applies with_sharding_constraint at the residual
     stream (+ MoE buffers, logits) — the SP/TP activation layout."""

@@ -156,6 +156,31 @@ token — after the integrity guards (a poisoned block's discarded tokens
 never fire) and never re-firing a retry replay's carried tokens, so the
 streamed sequence always equals the request's final ``output``.
 
+**Multi-device serving** (``mesh=``, with ``shard_slots=``/``shard_kv=``):
+the engine accepts a 2-axis ``('data', 'model')`` mesh and runs every
+fused dispatch — prefill wave, host-driven block, device-resident block,
+CoW page copy — as one ``shard_map`` over it (``check_vma=False``).
+``shard_slots`` splits the slot batch over 'data': every scheduler-pytree
+leaf, per-slot operand and decode-block output is sharded ``P('data')``
+on its slot axis, the contiguous cache genuinely shards its slot row
+axis, and the slot count is padded up to a 'data' multiple (padded lanes
+are permanently disabled).  Paged pools are *replicated-but-divergent*:
+each data shard writes only its own slots' pages into its replica and
+the pools are never read back to the host, which is why every
+pool-touching function must go through the engine's shard_maps (a plain
+jit could reshard — i.e. consolidate — the replicas) and why prefix
+sharing is namespaced per data shard (a page registered by another
+shard's slot holds garbage locally; trie keys carry the shard id).
+``shard_kv`` splits flash-decode attention over 'model' by routing the
+canonical ``kv_splits`` K-chunks of the split-K decode kernel across the
+axis ranks, combining per-rank partial softmaxes with an ordered
+``all_gather`` — bitwise identical to the single-device engine running
+the same ``kv_splits`` (see ``kernels/decode_attention/ops``).  All
+host/device ownership transitions below survive sharding unchanged:
+the host mirror stays the global (all-shard) view, and row-granular
+patches (``_set_bt_row``/``_kill_lane``/``_admit_lanes``) apply to the
+sharded arrays through GSPMD without consolidating them.
+
 Slot state machine — who owns what.  Each decode lane is mirrored twice:
 a device row in the resident ``SchedulerState`` pytree (``last_token``,
 ``cache_len``, ``emitted``, ``active``, ``max_new``, ``temps``, ``seeds``
@@ -165,7 +190,15 @@ everything admission, retirement and the page allocator need).  The
 device copy is authoritative during decode and is threaded block-to-block
 without readback; the host copy trails it by at most one block and is the
 only place FREE/ACTIVE transitions are decided.  Bracketed steps are
-paged-mode only; ``{host}``/``{device}`` marks where each step runs:
+paged-mode only; ``{host}``/``{device}`` marks where each step runs.
+Under a mesh the ``{device}`` column reads ``{sharded}``: the step
+executes once per mesh device over that device's slot shard (admission
+chunks, first-token sampling, lane merge, decode blocks, self-
+deactivation, the force-deactivate patch and block-table row updates all
+shard their slot axis over 'data'; KV attention additionally splits over
+'model' with ``shard_kv``), while every ``{host}`` decision — admission,
+retirement, page grants, CoW, retry replay, degrade and re-promotion —
+stays global, made once against the all-shard host mirror:
 
     ARRIVED --submit() {host}: seed assigned off the engine-lifetime
            arrival counter, deadline/TTFT clocks stamped--> QUEUED
@@ -298,10 +331,14 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention.ops import validate_num_splits
 from repro.models import transformer
 from repro.models.layers import Ctx
+from repro.runtime import sharding as shardlib
 from repro.runtime.fault import (CircuitBreaker, Watchdog, backoff_delay,
                                  with_retries)
 from repro.serving.faultinject import FaultInjector, InjectedFault
@@ -541,18 +578,24 @@ class _PrefixIndex:
         self._clock += 1
         return self._clock
 
-    def lookup(self, prompt) -> tuple:
+    def lookup(self, prompt, ns: int = 0) -> tuple:
         """Longest cached prefix of ``prompt``: the chain of matched
         full-page nodes plus, when the next page diverges mid-page, the
         best partially matching child and its common-token count (the
-        copy-on-write donor).  Touches matched nodes for LRU."""
+        copy-on-write donor).  Touches matched nodes for LRU.
+
+        ``ns`` is the sharing namespace (the slot batch's data shard under
+        multi-device serving): node keys are ``(ns,) + page tokens``, so a
+        prompt only ever matches pages registered by its OWN shard —
+        paged pools are replicated-but-divergent, and a page written on
+        another data-shard device holds garbage here."""
         ps = self.page_size
         now = self._tick()
         node, chain = self.root, []
         n_full = len(prompt) // ps
         while len(chain) < n_full:
             j = len(chain)
-            key = tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
+            key = (ns,) + tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
             child = node.children.get(key)
             if child is None:
                 break
@@ -562,8 +605,10 @@ class _PrefixIndex:
         rest = [int(t) for t in prompt[len(chain) * ps:]]
         boundary, blcp = None, 0
         for key, child in node.children.items():
+            if key[0] != ns:
+                continue
             lcp = 0
-            for a, b in zip(key, rest):
+            for a, b in zip(key[1:], rest):
                 if a != b:
                     break
                 lcp += 1
@@ -573,8 +618,9 @@ class _PrefixIndex:
             boundary.last_use = now
         return chain, boundary, blcp
 
-    def insert(self, prompt, pages) -> list:
-        """Index ``pages[j]`` as the KV of prompt page j.  Returns the NEW
+    def insert(self, prompt, pages, ns: int = 0) -> list:
+        """Index ``pages[j]`` as the KV of prompt page j under namespace
+        ``ns`` (see ``lookup``).  Returns the NEW
         nodes — the caller takes one pool reference per new node.  Groups
         whose token content is already cached keep the original page (two
         slots that prefilled the same prefix independently dedup to the
@@ -583,7 +629,7 @@ class _PrefixIndex:
         now = self._tick()
         node, new = self.root, []
         for j in range(len(pages)):
-            key = tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
+            key = (ns,) + tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
             child = node.children.get(key)
             if child is None:
                 child = _PrefixNode(key, pages[j], node)
@@ -633,6 +679,10 @@ class ServingEngine:
                  prefix_cache_pages: Optional[int] = None,
                  device_sched: bool = True,
                  kv_quant: bool = False,
+                 mesh=None,
+                 shard_slots: bool = True,
+                 shard_kv: bool = False,
+                 kv_splits: Optional[int] = None,
                  block_deadline_s: Optional[float] = None,
                  dispatch_retries: int = 2,
                  dispatch_backoff_s: float = 0.0,
@@ -656,6 +706,48 @@ class ServingEngine:
         self.paged = bool(paged)
         self.device_sched = bool(device_sched)
         self.kv_quant = bool(kv_quant)
+        # -- multi-device serving -------------------------------------------
+        # mesh axes: 'data' shards the decode slot batch (each device owns
+        # slots/dd lanes of every fused dispatch), 'model' shards
+        # flash-decode attention over the KV sequence (canonical split-K
+        # partials + an on-mesh partial-softmax combine).  mesh=None is the
+        # byte-identical single-device engine.
+        self.mesh = mesh
+        if mesh is not None:
+            if tuple(mesh.axis_names) != ("data", "model"):
+                raise ValueError(
+                    "ServingEngine mesh must have axis_names "
+                    f"('data', 'model'); got {tuple(mesh.axis_names)}")
+            if cfg.block_kind != "attn":
+                raise ValueError(
+                    "multi-device serving requires block_kind='attn' "
+                    "(recurrent kinds keep the single-device engine); got "
+                    f"{cfg.block_kind!r}")
+        dd = int(mesh.shape["data"]) if mesh is not None else 1
+        mm = int(mesh.shape["model"]) if mesh is not None else 1
+        self.shard_slots = bool(shard_slots) and dd > 1
+        self.shard_kv = bool(shard_kv) and mm > 1
+        self.requested_slots = batch_slots
+        if self.shard_slots and batch_slots % dd:
+            # pad the slot axis up to a data-axis multiple; padded lanes
+            # are permanently disabled (admission only ever assigns
+            # slots[:batch_slots]), so the engine's request-facing
+            # semantics are those of the requested slot count
+            self.slots = -(-batch_slots // dd) * dd
+        self._usable_slots = batch_slots
+        self.mesh_shape = (dd, mm)
+        self.slots_per_device = (self.slots // dd if self.shard_slots
+                                 else self.slots)
+        if kv_splits is None:
+            self.kv_splits = mm if self.shard_kv else 0
+        else:
+            self.kv_splits = int(kv_splits)
+            if self.kv_splits < 1:
+                raise ValueError("kv_splits must be >= 1 when set")
+        if self.shard_kv:
+            # the split count must tile evenly over the model axis (each
+            # rank owns kv_splits/mm canonical K-chunks)
+            validate_num_splits(self.kv_splits, mm)
         if self.kv_quant and cfg.block_kind != "attn":
             raise ValueError(
                 "kv_quant=True (int8 KV + per-(token, head) scales) requires "
@@ -696,6 +788,15 @@ class ServingEngine:
         self.cache_dtype = cache_dtype
         self.ctx = ctx or Ctx(mode="packed", group_size=cfg.group_size,
                               attn_q_chunk=128, attn_kv_chunk=128)
+        if self.kv_splits:
+            # canonical K-chunk split-K decode attention — the only
+            # formulation with the cross-shard bitwise contract (see
+            # kernels/decode_attention/ops.splitk_partials); kv_shard_axis
+            # routes the chunks across the mesh's 'model' ranks
+            self.ctx = dataclasses.replace(
+                self.ctx, kv_splits=self.kv_splits,
+                kv_shard_axis="model" if self.shard_kv else None,
+                kv_shard_size=mm if self.shard_kv else 1)
         self.seed = seed
         self.stats: dict = {}
         # -- robustness layer ---------------------------------------------
@@ -764,7 +865,6 @@ class ServingEngine:
             return jax.lax.cond(jnp.any(temps > 0.0), with_temperature,
                                 lambda _: greedy, None)
 
-        @functools.partial(jax.jit, donate_argnums=(2,))
         def _prefill_chunks(params, tokens, cache, bt, offsets, admit_mask,
                             last_idx, seeds, temps, emit_idx):
             """One admission wave: a (slots, C) chunk batch written in place
@@ -833,7 +933,6 @@ class ServingEngine:
 
             return tick
 
-        @functools.partial(jax.jit, donate_argnums=(2,))
         def _decode_block(params, tokens, cache, bt, cache_len, emitted,
                           max_new, active, temps, seeds, nan_mask):
             """Fused multi-tick decode: scan `decode_block` ticks on device.
@@ -863,7 +962,6 @@ class ServingEngine:
                 jax.lax.scan(tick, carry, None, length=block_)
             return blk.T, mask.T, bad, cache  # (slots, decode_block) each
 
-        @functools.partial(jax.jit, donate_argnums=(1, 2))
         def _decode_block_dev(params, state, cache, bt, nan_mask):
             """Device-resident fused decode block: the whole per-slot
             scheduler carry (``last_token``/``cache_len``/``emitted``/
@@ -930,7 +1028,6 @@ class ServingEngine:
             return transformer.prefill_step(cfg_, params, tokens, ctx_,
                                             cache, lengths=lengths)
 
-        @functools.partial(jax.jit, donate_argnums=(0,))
         def _cow_copy_page(cache, src, dst):
             """Copy-on-write split: duplicate pool page ``src`` onto the
             freshly allocated ``dst`` (all layers, K and V planes) so the
@@ -947,18 +1044,61 @@ class ServingEngine:
             return jax.tree_util.tree_map(write, cache, one_cache)
 
         self._sample_tokens = jax.jit(_sample)
-        self._prefill_chunks = _prefill_chunks
-        self._decode_block = _decode_block
-        self._decode_block_dev = _decode_block_dev
+        if mesh is None:
+            self._prefill_chunks = jax.jit(_prefill_chunks,
+                                           donate_argnums=(2,))
+            self._decode_block = jax.jit(_decode_block, donate_argnums=(2,))
+            self._decode_block_dev = jax.jit(_decode_block_dev,
+                                             donate_argnums=(1, 2))
+            self._cow_copy_page = jax.jit(_cow_copy_page,
+                                          donate_argnums=(0,))
+            self._shardings = None
+        else:
+            # shard_map the three fused dispatches (and the CoW page copy)
+            # over the mesh.  Scheduler-pytree leaves, per-slot operands and
+            # decode-block outputs shard their slot axis over 'data'; the
+            # contiguous cache genuinely shards its slot row axis; paged
+            # pools are replicated-but-DIVERGENT (each data shard writes
+            # only its own slots' pages and the pools are never read back),
+            # so every function that touches them must run under shard_map
+            # with the replication check disabled — a plain jit could let
+            # GSPMD reshard (consolidate) them, mixing replicas.
+            specs = shardlib.serving_specs(
+                mesh, slots=self.slots, paged=self.paged,
+                kv_quant=self.kv_quant, shard_slots=self.shard_slots)
+            st, cs, bts = specs["state"], specs["cache"], specs["bt"]
+            blks, toks = specs["blk"], specs["tokens"]
+            rep = P()
+            smap = functools.partial(compat.shard_map, mesh=mesh,
+                                     check_vma=False)
+            self._prefill_chunks = jax.jit(smap(
+                _prefill_chunks,
+                in_specs=(rep, toks, cs, bts, st, st, st, st, st, st),
+                out_specs=(st, cs)), donate_argnums=(2,))
+            self._decode_block = jax.jit(smap(
+                _decode_block,
+                in_specs=(rep, st, cs, bts, st, st, st, st, st, st, st),
+                out_specs=(blks, blks, st, cs)), donate_argnums=(2,))
+            self._decode_block_dev = jax.jit(smap(
+                _decode_block_dev,
+                in_specs=(rep, st, cs, bts, st),
+                out_specs=(st, blks, blks, st, cs)), donate_argnums=(1, 2))
+            self._cow_copy_page = jax.jit(smap(
+                _cow_copy_page, in_specs=(cs, rep, rep), out_specs=cs),
+                donate_argnums=(0,))
+            self._shardings = shardlib.serving_shardings(
+                mesh, {"state": st, "bt": bts, "cache": cs})
         self._admit_lanes = _admit_lanes
         self._set_bt_row = _set_bt_row
         self._kill_lane = _kill_lane
         self._prefill_full = _prefill_full
         self._adopt = _adopt
-        self._cow_copy_page = _cow_copy_page
         # production NaN-injection mask: all-False, allocated once (the
         # in-block jnp.where select is then an exact identity)
         self._no_nan = jnp.zeros((self.slots,), jnp.bool_)
+        if self._shardings is not None:
+            self._no_nan = jax.device_put(self._no_nan,
+                                          self._shardings["state"])
         # canary probe: a tiny dedicated jit (NOT the real fused block —
         # that donates the live state and cache, which a failing probe
         # must never put at risk).  It exercises the same dispatch seam
@@ -1422,7 +1562,14 @@ class ServingEngine:
 
     # -- prefix sharing (host side) ----------------------------------------
 
-    def _prefix_lookup(self, prompt) -> dict:
+    def _slot_shard(self, i: int) -> int:
+        """Data-shard owning slot ``i`` (0 when slots are unsharded) —
+        the prefix-sharing namespace: under slot sharding each device only
+        writes its own slots' pages into its (divergent) pool replica, so
+        a grant is only valid between slots on the same shard."""
+        return i // self.slots_per_device if self.shard_slots else 0
+
+    def _prefix_lookup(self, prompt, ns: int = 0) -> dict:
         """Map a prompt (the admission's *effective* prompt — for a retry
         replay that is prompt + carried tokens, whose pages the failed
         attempt may have registered before dying, making the replay
@@ -1442,7 +1589,7 @@ class ServingEngine:
 
         Returns the full pages to alias plus, when the base lands
         mid-page, the donor page to copy-on-write split."""
-        chain, boundary, blcp = self._prefix.lookup(prompt)
+        chain, boundary, blcp = self._prefix.lookup(prompt, ns)
         ps, c = self.page_size, self.prefill_chunk
         base = min(len(chain) * ps + blcp, len(prompt) - 1,
                    self.max_seq - c)
@@ -1456,19 +1603,22 @@ class ServingEngine:
                 "cow_src": cow_src}
 
     def _held_for_pending_prefix(self, req: Request, pending: dict,
-                                 have: int) -> bool:
+                                 have: int, ns: int = 0) -> bool:
         """Prefix-aware admission holdback: when the queue head would share
         more full pages with a PENDING admission's prompt than the index
         can grant right now (``have``, the head's current lookup base),
         wait for that donor to finish (it registers its pages on
         completion) instead of prefilling the common prefix twice.  Donors
         always finish in finitely many waves, so the head is never held
-        forever."""
+        forever.  Only same-shard donors (``ns``) count: a page another
+        data shard is about to register could never be granted here."""
         if self._prefix is None or not pending:
             return False
         prompt = self._eff_prompt(req)
         ps, c = self.page_size, self.prefill_chunk
         for admit in pending.values():
+            if self._slot_shard(admit["slot"]) != ns:
+                continue
             donor = admit["prompt"]
             lcp = 0
             for a, b in zip(donor, prompt):
@@ -1533,7 +1683,8 @@ class ServingEngine:
         m = plen // self.page_size
         if not m:
             return
-        new = self._prefix.insert(prompt, self._slot_pages[i][:m])
+        new = self._prefix.insert(prompt, self._slot_pages[i][:m],
+                                  ns=self._slot_shard(i))
         for node in new:
             self._pool.incref(node.page)
         # remember what this slot contributed so a later fault in the SAME
@@ -1587,7 +1738,11 @@ class ServingEngine:
         if not self.paged:
             return self._no_bt
         if self._bt_dev is None:
-            self._bt_dev = jnp.asarray(self._bt)
+            if self._shardings is not None:
+                self._bt_dev = jax.device_put(self._bt,
+                                              self._shardings["bt"])
+            else:
+                self._bt_dev = jnp.asarray(self._bt)
         return self._bt_dev
 
     # -- admission (chunked, in-place, batched across slots) ---------------
@@ -2024,6 +2179,9 @@ class ServingEngine:
             "seeds": jnp.asarray([r.seed if r else 0 for r in reqs],
                                  jnp.int32),
         }
+        if self._shardings is not None:
+            self._state = jax.device_put(self._state,
+                                         self._shardings["state"])
         if self.paged:
             self._bt_dev = None  # full re-upload from the host mirror at
             #                      the next dispatch (lazy, like run start)
@@ -2280,10 +2438,13 @@ class ServingEngine:
 
     def _zero_sched_state(self) -> dict:
         z = lambda dt: jnp.zeros((self.slots,), dt)
-        return {"last_token": z(jnp.int32), "cache_len": z(jnp.int32),
-                "emitted": z(jnp.int32), "active": z(jnp.bool_),
-                "max_new": z(jnp.int32), "temps": z(jnp.float32),
-                "seeds": z(jnp.int32)}
+        state = {"last_token": z(jnp.int32), "cache_len": z(jnp.int32),
+                 "emitted": z(jnp.int32), "active": z(jnp.bool_),
+                 "max_new": z(jnp.int32), "temps": z(jnp.float32),
+                 "seeds": z(jnp.int32)}
+        if self._shardings is not None:
+            state = jax.device_put(state, self._shardings["state"])
+        return state
 
     def reset_stats(self) -> None:
         """Open a fresh stats WINDOW: rebuild ``self.stats`` (every gauge
@@ -2355,6 +2516,12 @@ class ServingEngine:
             self._cache = transformer.init_cache(
                 self.cfg, self.slots, self.max_seq, self.cache_dtype,
                 kv_quant=self.kv_quant)
+        if self._shardings is not None:
+            # a fresh all-zero cache really is replicated, so the paged
+            # pools start consistent; per-shard divergence only accrues
+            # through the shard_map'd dispatches that follow
+            self._cache = jax.device_put(self._cache,
+                                         self._shardings["cache"])
 
     def _restore_device_residency(self) -> None:
         """Hand scheduling back to the device at a window boundary after a
@@ -2458,7 +2625,9 @@ class ServingEngine:
         # reservation (discounted by granted shared pages): the
         # reservation sum plus legacy shared pages never exceeds the
         # pool, so lazy page growth can't fail mid-flight.
-        for i, s in enumerate(slots):
+        # padded lanes (slot-axis rounding under data sharding) sit past
+        # _usable_slots and are never assigned — they tick fully masked
+        for i, s in enumerate(slots[:self._usable_slots]):
             if not queue:
                 break
             if not s.active and i not in pending:
@@ -2476,12 +2645,13 @@ class ServingEngine:
                 head = queue[0]
                 grant = None
                 if self.paged:
+                    ns = self._slot_shard(i)
                     if self._prefix is not None:
                         grant = self._prefix_lookup(
-                            self._eff_prompt(head))
+                            self._eff_prompt(head), ns)
                     if self._held_for_pending_prefix(
                             head, pending,
-                            grant["base"] if grant else 0):
+                            grant["base"] if grant else 0, ns):
                         # a pending admission is prefilling this head's
                         # prefix right now: wait for it to register its
                         # pages rather than prefill the prefix twice

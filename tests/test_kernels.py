@@ -287,3 +287,59 @@ def test_decode_attention_splitk_matches_ref(n_splits):
     out = da_ops.decode_attention_splitk(q, k, v, clen, n_splits=n_splits)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("s", [31, 101, 257, 256])
+@pytest.mark.parametrize("shards,K", [(2, 2), (2, 4), (4, 4), (4, 8)])
+def test_splitk_shard_merge_bitwise(s, shards, K):
+    """The partial-softmax merge across simulated 'model'-axis shards is
+    bit-for-bit equal to the single-shard split-K run in f32: each shard
+    computes its K/shards canonical chunks with ``splitk_partials`` at its
+    global split offset, the partials are concatenated in axis order (the
+    all_gather contract) and fed through the same ``splitk_combine`` —
+    covering prime / non-divisible KV lengths whose odd chunk sizes are
+    exactly where XLA's dot strategy would drift without the per-chunk
+    lax.map formulation."""
+    b, h, kv_h, d = 1, 4, 2, 32
+    keys = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(keys[0], (b, h, 1, d), jnp.float32)
+    k = jax.random.normal(keys[1], (b, kv_h, s, d), jnp.float32)
+    v = jax.random.normal(keys[2], (b, kv_h, s, d), jnp.float32)
+    clen = jnp.asarray(s - 2, jnp.int32)
+    ref = da_ops.decode_attention_splitk(q, k, v, clen, num_splits=K)
+    # simulate the mesh: pad to the canonical K-chunk grid, give each
+    # shard its contiguous run of chunks, merge in shard order
+    chunk = -(-s // K)
+    pad = K * chunk - s
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_local = K // shards
+    ms, ls, accs = [], [], []
+    for r in range(shards):
+        lo = r * n_local * chunk
+        m, l, acc = da_ops.splitk_partials(
+            q, kp[:, :, lo:lo + n_local * chunk],
+            vp[:, :, lo:lo + n_local * chunk], clen,
+            n_splits=n_local, chunk=chunk, split0=r * n_local)
+        ms.append(m), ls.append(l), accs.append(acc)
+    out = da_ops.splitk_combine(jnp.concatenate(ms, axis=2),
+                                jnp.concatenate(ls, axis=2),
+                                jnp.concatenate(accs, axis=2), q.dtype)
+    assert np.array_equal(np.asarray(out), np.asarray(ref)), (s, shards, K)
+
+
+def test_splitk_num_splits_validation():
+    """num_splits must tile the mesh axis exactly; the error says so."""
+    with pytest.raises(ValueError, match="model"):
+        da_ops.validate_num_splits(3, 2)
+    with pytest.raises(ValueError, match="num_splits"):
+        da_ops.validate_num_splits(0, 2)
+    da_ops.validate_num_splits(4, 2)  # exact multiple passes
+    b, h, kv_h, s, d = 1, 2, 2, 64, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, h, 1, d))
+    k = jax.random.normal(keys[1], (b, kv_h, s, d))
+    v = jax.random.normal(keys[2], (b, kv_h, s, d))
+    with pytest.raises(ValueError, match="model"):
+        da_ops.decode_attention_splitk(q, k, v, jnp.asarray(60, jnp.int32),
+                                       num_splits=3, mesh_axis_size=2)

@@ -30,6 +30,8 @@ engine with deterministic *transient* (self-clearing) fault schedules:
 
 from __future__ import annotations
 
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -482,5 +484,99 @@ def test_transient_schedules_recover_property(served_model, baselines,
     def prop(seed):
         _run_transient_schedule(transient_engine, cfg, seed,
                                 baselines["shared"])
+
+    prop()
+
+
+# -- property: transient schedules on a SHARDED engine -----------------------
+
+_MESH_HEAL_SCRIPT = """
+import jax
+import numpy as np
+from repro import compat
+from repro.configs import get_config
+from repro.models import transformer
+from repro.models.layers import Ctx
+from repro.serving import (FaultInjector, Request, RequestStatus,
+                           ServingEngine)
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+packed = transformer.pack_params(cfg, params)
+ctx = Ctx(mode="packed", group_size=cfg.group_size,
+          attn_q_chunk=128, attn_kv_chunk=128)
+KW = dict(max_seq=32, batch_slots=2, prefill_chunk=4, decode_block=4,
+          paged=True, page_size=4, kv_pages=24, enable_prefix_sharing=True)
+
+def prompts():
+    rng = np.random.default_rng(0)
+    return [rng.integers(1, cfg.vocab_size,
+                         size=int(rng.integers(3, 9))).astype(np.int32)
+            for _ in range(3)]
+
+def reqs():
+    return [Request(prompt=p, max_new_tokens=10) for p in prompts()]
+
+beng = ServingEngine(cfg, packed, ctx=ctx, **KW)
+brs = reqs()
+beng.run(brs)
+baseline = [r.output.tolist() for r in brs]
+
+mesh = compat.make_mesh((2, 2), ("data", "model"))
+eng = ServingEngine(cfg, packed, ctx=ctx, mesh=mesh, shard_kv=True,
+                    max_retries=4, retry_backoff_s=0.0,
+                    retry_breaker_threshold=99, probe_cooldown_blocks=1,
+                    audit_on_retire=True, **KW)
+for seed in {seeds}:
+    fi = FaultInjector.random_schedule(seed, slots=2, n_faults=3,
+                                       max_block=8, max_alloc=12,
+                                       transient=True)
+    eng.fault_injector = fi
+    rs = reqs()
+    eng.run(rs)
+    for r, b in zip(rs, baseline):
+        assert r.status in (RequestStatus.OK, RequestStatus.DEGRADED), \\
+            (seed, r.status, r.error)
+        assert r.output.tolist() == b, (seed, r.error)
+    assert eng.audit()["ok"]
+print("MESH_HEAL_PROPERTY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_transient_schedules_recover_property():
+    """The self-healing property on a SHARDED (2x2 mesh) engine, over
+    Hypothesis-drawn seeds: any transient schedule heals to all-OK/
+    DEGRADED with tokens identical to the unsharded uninterrupted run.
+    Multi-device jax needs XLA_FLAGS set before init, so the drawn seed
+    batch executes in one subprocess against a resident mesh engine
+    (seeded deterministic coverage lives in
+    tests/test_multidevice.py::test_mesh_transient_faults_self_heal)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as state
+
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+
+    @hyp.settings(max_examples=1, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(seeds=state.lists(
+        state.integers(min_value=0, max_value=2 ** 31 - 1),
+        min_size=2, max_size=2, unique=True))
+    def prop(seeds):
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=src + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run(
+            [sys.executable, "-c",
+             _MESH_HEAL_SCRIPT.format(seeds=tuple(seeds))],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0 and "MESH_HEAL_PROPERTY_OK" in \
+            out.stdout, (seeds, out.stdout[-2000:], out.stderr[-4000:])
 
     prop()
